@@ -1,0 +1,264 @@
+"""Benchmarks reproducing the paper's evaluation (Figures 7-10).
+
+"Threads" map to combining-batch lanes (DESIGN.md §2/§9): a lane count n is
+the paper's n concurrent threads announcing into help[n]. Throughput is
+measured on CPU-jitted steady-state steps; the reproduced *claims* are the
+relative orderings:
+
+  F7/F8: directory-stable, 1K keys — WF-Ext > {LF-Split, LF-Freeze} at high
+         lookup %, gap grows with lookup fraction;
+  F9:    256K keys — LF-Freeze-M closes the gap (weaker progress guarantee,
+         cheaper updates); WF-Ext second, still ahead of LF-Split;
+  F10a:  growth from 2 buckets — WF-Ext resizing is slower (splits are
+         combiner transactions);
+  F10b:  amortized over a long mixed run — WF-Ext regains directory-stable
+         throughput.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as BL
+from repro.core import table as T
+
+
+def _bench(fn, args, iters=50, warmup=3):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _op_stream(rng, keyspace, n, lookup_pct):
+    r = rng.random(n)
+    is_lookup = r < lookup_pct / 100.0
+    rest = (~is_lookup)
+    ins = rest & (rng.random(n) < 0.5)
+    dele = rest & ~ins
+    kinds = np.where(ins, 1, np.where(dele, 2, 0)).astype(np.int32)
+    keys = rng.choice(keyspace, size=n).astype(np.int32)
+    vals = rng.integers(0, 1 << 20, size=n).astype(np.int32)
+    qmask = is_lookup
+    return kinds, keys, vals, qmask
+
+
+# ---------------------------------------------------------------------------
+# steady-state steps per algorithm (lookups + updates in one jitted call)
+
+
+def make_wfext_step(nlanes, dmax, pool):
+    cfg = T.TableConfig(dmax=dmax, bucket_size=8, pool_size=pool,
+                        n_lanes=nlanes)
+
+    @jax.jit
+    def step(state, kinds, keys, vals, qkeys):
+        found, got = T.lookup(cfg, state, qkeys)       # rule-A lookups
+        ops = T.make_ops(cfg, state, kinds, keys, vals)
+        state, res = T.apply_batch(cfg, state, ops)
+        return state, res.status.sum() + found.sum() + got.sum()
+
+    return cfg, T.init_table(cfg), step
+
+
+def make_split_step(nlanes, depth, max_nodes):
+    cfg = BL.SplitConfig(depth=depth, max_nodes=max_nodes, n_lanes=nlanes,
+                         max_walk=128)
+
+    @jax.jit
+    def step(state, kinds, keys, vals, qkeys):
+        found, got = BL.split_lookup(cfg, state, qkeys)
+        state, status = BL.split_update(cfg, state, kinds, keys, vals)
+        return state, status.sum() + found.sum() + got.sum()
+
+    return cfg, BL.split_init(cfg), step
+
+
+def make_freeze_step(nlanes, depth, pool):
+    cfg = BL.FreezeConfig(depth=depth, bucket_size=8, pool_size=pool,
+                          n_lanes=nlanes)
+
+    @jax.jit
+    def step(state, kinds, keys, vals, qkeys):
+        found, got = BL.freeze_lookup(cfg, state, qkeys)
+        state, status = BL.freeze_update(cfg, state, kinds, keys, vals)
+        return state, status.sum() + found.sum() + got.sum()
+
+    return cfg, BL.freeze_init(cfg), step
+
+
+def make_lock_step(nlanes, depth):
+    cfg = BL.LockConfig(depth=depth, bucket_size=64, n_lanes=nlanes)
+
+    @jax.jit
+    def step(state, kinds, keys, vals, qkeys):
+        # lock table serializes EVERYTHING, lookups included (rule A broken):
+        # interleave the lookup batch as kind-3 ops
+        st, s1, _ = BL.lock_step(cfg, state, kinds, keys, vals)
+        st, s2, v = BL.lock_step(cfg, st, jnp.full_like(kinds, 3), qkeys, vals)
+        return st, s1.sum() + s2.sum() + v.sum()
+
+    return cfg, BL.lock_init(cfg), step
+
+
+ALGS = {
+    "WF-Ext-J": make_wfext_step,
+    "LF-Freeze-M-J": make_freeze_step,
+    "LF-Split-J": make_split_step,
+    "Lock-J": make_lock_step,
+}
+
+
+def directory_stable(nkeys=1024, lookup_pct=90, lanes=(1, 4, 16, 64),
+                     iters=30, seed=0):
+    """Fig 7/8 (nkeys=1024) and Fig 9 (nkeys=256K) analogue.
+
+    Returns rows: (alg, lanes, Mops/s)."""
+    rng = np.random.default_rng(seed)
+    keyspace = rng.choice(np.arange(1, 1 << 30), size=nkeys, replace=False)
+    depth = max(2, int(np.log2(max(nkeys // 8, 4))))
+    pool = max(256, nkeys // 2)
+    rows = []
+    for name, maker in ALGS.items():
+        for n in lanes:
+            if name == "WF-Ext-J":
+                cfg, st, step = maker(n, dmax=depth + 4, pool=pool)
+            elif name == "LF-Split-J":
+                cfg, st, step = maker(n, depth=depth,
+                                      max_nodes=2 * nkeys + (1 << depth) + 64)
+            elif name == "LF-Freeze-M-J":
+                cfg, st, step = maker(n, depth=depth, pool=pool + (1 << depth))
+            else:
+                cfg, st, step = maker(n, depth=depth)
+            # pre-populate half the keyspace (batched inserts)
+            st = _prepopulate(name, cfg, st, keyspace[: nkeys // 2])
+            kinds, keys, vals, qm = _op_stream(rng, keyspace, n, 0)
+            qkeys = rng.choice(keyspace, size=n).astype(np.int32)
+            args = (st, jnp.asarray(_mix_kinds(kinds, lookup_pct, rng)),
+                    jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(qkeys))
+            sec = _bench(lambda *a: step(*a), args, iters=iters)
+            ops = 2 * n  # n updates+nops & n lookups per step
+            rows.append((name, n, ops / sec / 1e6))
+            # release compiled executables: XLA's CPU JIT exhausts its
+            # dylib symbol space after ~15 such programs in one process
+            jax.clear_caches()
+    return rows
+
+
+def _mix_kinds(kinds, lookup_pct, rng):
+    """Convert (100-lookup_pct)% of lanes to updates, rest NOP (their work
+    is carried by the lookup batch of equal width)."""
+    n = len(kinds)
+    upd_frac = (100 - lookup_pct) / 100 * 2  # lookups ride separately
+    is_upd = rng.random(n) < min(upd_frac, 1.0)
+    return np.where(is_upd, kinds, 0).astype(np.int32)
+
+
+def _prepopulate(name, cfg, st, keys):
+    """Batched inserts through ONE jitted update per config — eager calls
+    here would JIT thousands of tiny kernels and exhaust the CPU dylib JIT."""
+    n = cfg.n_lanes
+    vals = np.arange(len(keys), dtype=np.int32)
+    if name == "WF-Ext-J":
+        def upd(st, kinds, kk, vv):
+            return T.apply_batch(cfg, st, T.make_ops(cfg, st, kinds, kk, vv))[0]
+    elif name == "LF-Split-J":
+        def upd(st, kinds, kk, vv):
+            return BL.split_update(cfg, st, kinds, kk, vv)[0]
+    elif name == "LF-Freeze-M-J":
+        def upd(st, kinds, kk, vv):
+            return BL.freeze_update(cfg, st, kinds, kk, vv)[0]
+    else:
+        def upd(st, kinds, kk, vv):
+            return BL.lock_step(cfg, st, kinds, kk, vv)[0]
+    upd = jax.jit(upd)
+    for i in range(0, len(keys), n):
+        chunk = keys[i:i + n]
+        pad = n - len(chunk)
+        kk = np.pad(chunk, (0, pad)).astype(np.int32)
+        kinds = np.pad(np.ones(len(chunk), np.int32), (0, pad))
+        vv = np.pad(vals[i:i + n][: len(chunk)], (0, pad))
+        st = upd(st, jnp.asarray(kinds), jnp.asarray(kk), jnp.asarray(vv))
+    jax.block_until_ready(jax.tree_util.tree_leaves(st))
+    return st
+
+
+def resize_growth(nkeys=4096, lanes=64, seed=0):
+    """Fig 10a analogue: time to grow WF-Ext from 2 buckets to final size,
+    vs inserting into a statically-sized LF-Freeze (no resizing: the lower
+    bound the lock-free tables enjoy in the paper's test)."""
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(np.arange(1, 1 << 30), size=nkeys, replace=False)
+    rows = []
+
+    cfg = T.TableConfig(dmax=14, bucket_size=8, pool_size=nkeys,
+                        n_lanes=lanes, initial_depth=1)
+    st = T.init_table(cfg)
+    apply_j = jax.jit(partial(T.apply_batch, cfg), donate_argnums=0)
+    t0 = time.perf_counter()
+    for i in range(0, nkeys, lanes):
+        chunk = keys[i:i + lanes]
+        kk = np.pad(chunk, (0, lanes - len(chunk))).astype(np.int32)
+        kinds = np.pad(np.ones(len(chunk), np.int32), (0, lanes - len(chunk)))
+        ops = T.make_ops(cfg, st, kinds, kk, kk)
+        st, _ = apply_j(st, ops)
+    jax.block_until_ready(st.directory)
+    wf_time = time.perf_counter() - t0
+    rows.append(("WF-Ext-J grow", lanes, wf_time, int(st.depth),
+                 int(st.nalloc)))
+
+    fcfg = BL.FreezeConfig(depth=10, bucket_size=8, pool_size=2 * nkeys,
+                           n_lanes=lanes)
+    fst = BL.freeze_init(fcfg)
+    fupd = jax.jit(partial(BL.freeze_update, fcfg), donate_argnums=0)
+    t0 = time.perf_counter()
+    for i in range(0, nkeys, lanes):
+        chunk = keys[i:i + lanes]
+        kk = np.pad(chunk, (0, lanes - len(chunk))).astype(np.int32)
+        kinds = np.pad(np.ones(len(chunk), np.int32), (0, lanes - len(chunk)))
+        fst, _ = fupd(fst, jnp.asarray(kinds), jnp.asarray(kk), jnp.asarray(kk))
+    jax.block_until_ready(fst.directory)
+    rows.append(("LF-Freeze-M-J static insert", lanes,
+                 time.perf_counter() - t0, fcfg.depth, int(fst.nalloc)))
+    return rows
+
+
+def resize_amortized(nkeys=1024, lanes=64, steps=300, seed=0):
+    """Fig 10b analogue: 90% lookup / 10% insert from 2 buckets; long-run
+    throughput should approach the directory-stable number."""
+    rng = np.random.default_rng(seed)
+    keyspace = rng.choice(np.arange(1, 1 << 30), size=nkeys, replace=False)
+    cfg = T.TableConfig(dmax=11, bucket_size=8, pool_size=nkeys,
+                        n_lanes=lanes, initial_depth=1)
+    st = T.init_table(cfg)
+
+    @jax.jit
+    def step(state, kinds, keys, vals, qkeys):
+        found, got = T.lookup(cfg, state, qkeys)
+        ops = T.make_ops(cfg, state, kinds, keys, vals)
+        state, res = T.apply_batch(cfg, state, ops)
+        return state, res.status.sum() + found.sum() + got.sum()
+
+    # warmup-compile with one batch
+    kinds = np.where(rng.random(lanes) < 0.2, 1, 0).astype(np.int32)
+    keys = rng.choice(keyspace, size=lanes).astype(np.int32)
+    st, _ = step(st, jnp.asarray(kinds), jnp.asarray(keys), jnp.asarray(keys),
+                 jnp.asarray(keys))
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        kinds = np.where(rng.random(lanes) < 0.2, 1, 0).astype(np.int32)
+        keys = rng.choice(keyspace, size=lanes).astype(np.int32)
+        st, out = step(st, jnp.asarray(kinds), jnp.asarray(keys),
+                       jnp.asarray(keys), jnp.asarray(keys))
+    jax.block_until_ready(out)
+    sec = time.perf_counter() - t0
+    return [("WF-Ext-J amortized (90/10 from 2 buckets)", lanes,
+             2 * lanes * steps / sec / 1e6, int(st.depth), int(st.nalloc))]

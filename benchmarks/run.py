@@ -1,0 +1,132 @@
+"""Benchmark entry: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = Mops/s or metadata).
+Fast mode (default) uses reduced sweeps so `python -m benchmarks.run`
+finishes on the CPU container; `--full` widens lane sweeps and key counts
+to the paper's scales.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def fig7_8_directory_stable(full=False):
+    from benchmarks.paper_figs import directory_stable
+    lanes = (1, 4, 16, 64) if not full else (1, 2, 4, 8, 16, 32, 64, 128)
+    rows = []
+    for pct in (50, 90):
+        for name, n, mops in directory_stable(nkeys=1024, lookup_pct=pct,
+                                              lanes=lanes,
+                                              iters=20 if not full else 50):
+            us = 2 * n / mops if mops else 0.0
+            rows.append((f"fig7_8/{pct}lkp/{name}/lanes{n}", us,
+                         f"{mops:.3f}Mops"))
+    return rows
+
+
+def fig9_large_table(full=False):
+    from benchmarks.paper_figs import directory_stable
+    nkeys = 262144 if full else 16384
+    lanes = (16, 64) if not full else (16, 64, 128)
+    rows = []
+    for name, n, mops in directory_stable(nkeys=nkeys, lookup_pct=90,
+                                          lanes=lanes, iters=10):
+        us = 2 * n / mops if mops else 0.0
+        rows.append((f"fig9/{nkeys // 1024}Kkeys/{name}/lanes{n}", us,
+                     f"{mops:.3f}Mops"))
+    return rows
+
+
+def fig10a_resize_growth(full=False):
+    from benchmarks.paper_figs import resize_growth
+    rows = []
+    for name, lanes, sec, depth, nb in resize_growth(
+            nkeys=8192 if full else 2048, lanes=64):
+        rows.append((f"fig10a/{name}", sec * 1e6,
+                     f"depth={depth};buckets={nb}"))
+    return rows
+
+
+def fig10b_amortized(full=False):
+    from benchmarks.paper_figs import resize_amortized
+    rows = []
+    for name, lanes, mops, depth, nb in resize_amortized(
+            steps=300 if full else 120):
+        rows.append((f"fig10b/{name}", 2 * lanes / mops,
+                     f"{mops:.3f}Mops;depth={depth}"))
+    return rows
+
+
+def roofline_summary(full=False):
+    """Derived from dry-run artifacts (if present)."""
+    try:
+        from benchmarks.roofline import summarize
+        cells, counts = summarize()
+    except Exception:
+        return [("roofline/artifacts", 0.0, "missing")]
+    rows = [("roofline/cells_ok", 0.0, str(counts["ok"])),
+            ("roofline/cells_failed", 0.0, str(counts["failed"])),
+            ("roofline/cells_skipped", 0.0, str(counts["skipped"]))]
+    for cell, rec in sorted(cells.items()):
+        if rec["status"] != "ok" or rec["mesh"] != "pod16x16":
+            continue
+        r = rec["roofline"]
+        step = max(r.values())
+        rows.append((f"roofline/{cell}", step * 1e6,
+                     rec["bottleneck"].replace("_s", "")))
+    return rows
+
+
+TABLES = {
+    "fig7_8": fig7_8_directory_stable,
+    "fig9": fig9_large_table,
+    "fig10a": fig10a_resize_growth,
+    "fig10b": fig10b_amortized,
+    "roofline": roofline_summary,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(TABLES))
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    if args.only:
+        print("name,us_per_call,derived")
+        failed = 0
+        try:
+            for row in TABLES[args.only](full=args.full):
+                print(f"{row[0]},{row[1]:.2f},{row[2]}")
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{args.only},0.00,ERROR:{type(e).__name__}:{e}")
+        sys.exit(1 if failed else 0)
+
+    # One subprocess per table: XLA's CPU JIT fails to materialize symbols
+    # once too many jitted programs pile up in a single process.
+    import subprocess
+    print("name,us_per_call,derived")
+    sys.stdout.flush()
+    failed = 0
+    for name in TABLES:
+        cmd = [sys.executable, "-m", "benchmarks.run", "--only", name]
+        if args.full:
+            cmd.append("--full")
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=2400)
+        out = proc.stdout.splitlines()
+        for line in out:
+            if line and not line.startswith("name,"):
+                print(line)
+        sys.stdout.flush()
+        if proc.returncode != 0:
+            failed += 1
+            if not any("ERROR" in line for line in out):
+                print(f"{name},0.00,ERROR:subprocess:{proc.stderr[-200:]}")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

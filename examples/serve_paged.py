@@ -1,0 +1,45 @@
+"""Batched serving over the WF-Ext paged KV cache: admit a request batch,
+decode, evict finished sequences, admit new ones — the page table grows and
+shrinks through wait-free transactions.
+
+Run: PYTHONPATH=src python examples/serve_paged.py
+"""
+import dataclasses
+import jax.numpy as jnp
+import numpy as np
+import jax
+
+from repro.configs.archs import smoke_config
+from repro.core import table as T
+from repro.models.model import init_params
+from repro.serving import kvcache as KV
+from repro.serving.engine import EngineState, init_engine, make_paged_config, serve_step
+
+cfg = dataclasses.replace(smoke_config("deepseek-7b"), remat=False)
+params = init_params(cfg, jax.random.key(0))
+pc = make_paged_config(cfg, batch=4, max_len=64, page_size=8)
+est = init_engine(cfg, pc)
+
+rng = np.random.default_rng(0)
+st = KV.admit(pc, est.paged, jnp.ones(4, bool), jnp.asarray([1, 2, 3, 4], jnp.int32))
+est = EngineState(paged=st, tokens=jnp.asarray(rng.integers(1, cfg.vocab_size, 4), jnp.int32))
+
+for step in range(24):
+    est, logits = serve_step(cfg, pc, est, params)
+    if step % 8 == 7:
+        print(f"step {step + 1}: lengths={np.asarray(est.paged.lengths)} "
+              f"pages={int(est.paged.page_alloc)} "
+              f"mappings={int(T.table_size(est.paged.table))} "
+              f"dir_depth={int(est.paged.table.depth)}")
+
+# sequence 2 finishes: evict (wait-free DELETEs) and admit a new request
+st = KV.evict(pc, est.paged, jnp.asarray([False, True, False, False]))
+st = KV.admit(pc, st, jnp.asarray([False, True, False, False]),
+              jnp.asarray([0, 9, 0, 0], jnp.int32))
+est = EngineState(paged=st, tokens=est.tokens)
+for _ in range(8):
+    est, _ = serve_step(cfg, pc, est, params)
+print(f"after evict/admit: lengths={np.asarray(est.paged.lengths)} "
+      f"free_pages={int(est.paged.free_top)} "
+      f"mappings={int(T.table_size(est.paged.table))}")
+print("paged serving OK")

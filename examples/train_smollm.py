@@ -1,0 +1,14 @@
+"""End-to-end training driver: smollm-family reduced config, a few hundred
+steps with checkpoint/resume on CPU. The same launcher runs the full config
+on a pod (see src/repro/launch/train.py).
+
+Run: PYTHONPATH=src python examples/train_smollm.py
+"""
+from repro.launch.train import main
+
+main([
+    "--arch", "smollm-135m", "--smoke",
+    "--steps", "200", "--seq-len", "128", "--global-batch", "8",
+    "--lr", "3e-3", "--ckpt-dir", "/tmp/repro_smollm_ckpt",
+    "--ckpt-every", "100",
+])

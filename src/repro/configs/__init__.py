@@ -1,0 +1,2 @@
+from repro.configs.archs import ARCHS, get_config, smoke_config  # noqa: F401
+from repro.configs.shapes import SHAPES, cell_supported, cells, input_specs  # noqa: F401

@@ -1,0 +1,2 @@
+"""Assigned architecture config (see archs.py for the table)."""
+from repro.configs.archs import CODEQWEN1_5_7B as CONFIG  # noqa: F401

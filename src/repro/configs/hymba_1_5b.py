@@ -1,0 +1,2 @@
+"""Assigned architecture config (see archs.py for the table)."""
+from repro.configs.archs import HYMBA_1_5B as CONFIG  # noqa: F401

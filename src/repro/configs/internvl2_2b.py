@@ -1,0 +1,2 @@
+"""Assigned architecture config (see archs.py for the table)."""
+from repro.configs.archs import INTERNVL2_2B as CONFIG  # noqa: F401

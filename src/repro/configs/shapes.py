@@ -1,0 +1,106 @@
+"""Assigned input shapes × architecture cells and their ShapeDtypeStruct
+input specs (the dry-run contract: weak-type-correct, shardable, zero
+device allocation).
+
+LM shapes are seq_len × global_batch. decode_*/long_* lower `serve_step`
+(one new token over a seq_len KV cache), not `train_step`. long_500k needs
+sub-quadratic attention: it runs for the SSM/hybrid archs (mamba2, hymba)
+and is SKIPPED for pure full-attention archs (recorded per cell and in
+DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import ARCHS, get_config
+from repro.models.model import ModelConfig, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+# sub-quadratic archs that run the 500k cell
+LONG_CONTEXT_ARCHS = ("hymba-1.5b", "mamba2-2.7b")
+
+ENC_LEN = 4096  # encoder memory length for the enc-dec arch's decode cells
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, "pure full-attention arch: 500k decode cache/quadratic prefill infeasible (DESIGN.md §6)"
+    return True, ""
+
+
+def cells():
+    """All (arch, shape, supported, reason) cells — 40 total."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, why = cell_supported(arch, shape)
+            out.append((arch, shape, ok, why))
+    return out
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape_name: str,
+                cfg: Optional[ModelConfig] = None) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every input of the step function.
+
+    train/prefill → {"tokens", "targets"?, extras}; decode → {"tokens",
+    "cache": pytree of structs}.
+    """
+    cfg = cfg or get_config(arch)
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    dt = cfg.jdtype
+
+    if sh.mode in ("train", "prefill"):
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if sh.mode == "train":
+            batch["targets"] = _sds((B, S), jnp.int32)
+        if cfg.n_prefix_embeds:
+            batch["prefix_embeds"] = _sds((B, cfg.n_prefix_embeds, cfg.d_model), dt)
+        if cfg.enc_layers:
+            batch["enc_frames"] = _sds((B, min(S, ENC_LEN), cfg.d_model), dt)
+        return batch
+
+    # decode: one token over an S-long cache
+    cache = init_cache(cfg, batch=1, max_len=1, enc_len=1)  # structure only
+    spec_cache = {}
+    Lx = cfg.n_layers
+    if cfg.has_attn():
+        kv_dt = jnp.int8 if cfg.kv_quant == "int8" else dt
+        spec_cache["k"] = _sds((Lx, B, S, cfg.n_kv_heads, cfg.head_dim), kv_dt)
+        spec_cache["v"] = _sds((Lx, B, S, cfg.n_kv_heads, cfg.head_dim), kv_dt)
+        if cfg.kv_quant == "int8":
+            spec_cache["k_scale"] = _sds((Lx, B, S, cfg.n_kv_heads), jnp.float32)
+            spec_cache["v_scale"] = _sds((Lx, B, S, cfg.n_kv_heads), jnp.float32)
+    if cfg.has_ssm():
+        spec_cache["ssm_state"] = _sds(
+            (Lx, B, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), dt)
+        spec_cache["conv_state"] = _sds(
+            (Lx, B, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dt)
+    if cfg.enc_layers:
+        spec_cache["memory"] = _sds((B, ENC_LEN, cfg.d_model), dt)
+    spec_cache["length"] = _sds((B,), jnp.int32)
+    assert set(spec_cache) == set(cache), (set(spec_cache), set(cache))
+    return {"tokens": _sds((B, 1), jnp.int32), "cache": spec_cache}

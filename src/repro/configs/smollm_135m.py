@@ -1,0 +1,2 @@
+"""Assigned architecture config (see archs.py for the table)."""
+from repro.configs.archs import SMOLLM_135M as CONFIG  # noqa: F401

@@ -1,0 +1,138 @@
+"""Distributed WF-Ext: the table sharded over the 'model' mesh axis.
+
+Extendible hashing gives sharding for free: the top `shard_bits` of the
+hash select the owning shard, and each shard runs an independent WF-Ext
+instance over the remaining bits (TableConfig.hash_shift drops the consumed
+prefix). This is the paper's architecture at datacenter scale:
+
+  announce  — the op batch (sharded over 'data') is all-gathered within the
+              data axis: the distributed `help[]` array;
+  combine   — every replica of shard j deterministically applies the full
+              announced set destined to j (replicas stay bit-identical, the
+              SPMD analogue of PSim's "some thread's CAS wins");
+  results   — each op's status lives on its owner shard; a psum over
+              'model' (masked) routes it back to the announcing lane.
+
+Lookups are rule-A: local gathers + one masked psum — they never touch the
+combining machinery. Communication per transaction is O(n_ops) metadata,
+independent of table size; resizing stays entirely shard-local (the
+extendible directory's locality argument, now across the network).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import table as T
+from repro.core.hashing import HASH_FNS
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    shard_bits: int = 1                  # 2**shard_bits table shards
+    data_axis: str = "data"
+    model_axis: str = "model"
+    local: T.TableConfig = dataclasses.field(
+        default_factory=lambda: T.TableConfig())
+
+    @property
+    def n_shards(self) -> int:
+        return 1 << self.shard_bits
+
+    def local_cfg(self, n_global_lanes: int) -> T.TableConfig:
+        return dataclasses.replace(
+            self.local, hash_shift=self.shard_bits, n_lanes=n_global_lanes)
+
+
+def init_dist_table(cfg: DistConfig, n_global_lanes: int):
+    """Stacked per-shard states [n_shards, ...] (shard over model axis)."""
+    local = T.init_table(cfg.local_cfg(n_global_lanes))
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_shards,) + x.shape).copy(),
+        local)
+
+
+def _dest_shard(cfg: DistConfig, keys):
+    h = HASH_FNS[cfg.local.hash_name](keys)
+    return (h >> jnp.uint32(32 - cfg.shard_bits)).astype(jnp.int32)
+
+
+def dist_apply_batch(cfg: DistConfig, mesh, state, ops: T.OpBatch):
+    """One distributed combining transaction.
+
+    state: stacked TableState sharded P(model); ops: OpBatch sharded
+    P(data). Returns (state', BatchResult sharded P(data))."""
+
+    def body(state_blk, ops_blk):
+        # squeeze the per-device shard (model axis block size 1)
+        st = jax.tree.map(lambda x: x[0], state_blk)
+        # announce: publish the help array to every shard replica
+        kind = jax.lax.all_gather(ops_blk.kind, cfg.data_axis, tiled=True)
+        key = jax.lax.all_gather(ops_blk.key, cfg.data_axis, tiled=True)
+        value = jax.lax.all_gather(ops_blk.value, cfg.data_axis, tiled=True)
+        seq = jax.lax.all_gather(ops_blk.seq, cfg.data_axis, tiled=True)
+        n_glob = kind.shape[0]
+        lcfg = cfg.local_cfg(n_glob)
+
+        j = jax.lax.axis_index(cfg.model_axis)
+        dest = _dest_shard(cfg, key)
+        mine = (dest == j) & (kind != T.NOP)
+        gops = T.OpBatch(kind=jnp.where(mine, kind, T.NOP), key=key,
+                         value=value, seq=seq)
+        st2, res = T.apply_batch(lcfg, st, gops)
+
+        # results ride home on a masked psum over the model axis
+        contrib = jnp.where(mine, res.status.astype(jnp.int32), 0)
+        status_glob = jax.lax.psum(contrib, cfg.model_axis)
+        err = jax.lax.psum(res.error.astype(jnp.int32), cfg.model_axis) > 0
+        i = jax.lax.axis_index(cfg.data_axis)
+        n_loc = ops_blk.kind.shape[0]
+        status_loc = jax.lax.dynamic_slice(status_glob, (i * n_loc,), (n_loc,))
+        state_out = jax.tree.map(lambda x: x[None], st2)
+        return state_out, T.BatchResult(status=status_loc.astype(jnp.int8),
+                                        error=err)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(cfg.model_axis), state),
+                  T.OpBatch(P(cfg.data_axis), P(cfg.data_axis),
+                            P(cfg.data_axis), P(cfg.data_axis))),
+        out_specs=(jax.tree.map(lambda _: P(cfg.model_axis), state),
+                   T.BatchResult(P(cfg.data_axis), P())),
+        check_vma=False,
+    )
+    return fn(state, ops)
+
+
+def dist_lookup(cfg: DistConfig, mesh, state, queries):
+    """Rule-A distributed lookup: local gather + masked psum combine."""
+
+    def body(state_blk, q_blk):
+        st = jax.tree.map(lambda x: x[0], state_blk)
+        q = jax.lax.all_gather(q_blk, cfg.data_axis, tiled=True)
+        lcfg = cfg.local_cfg(q.shape[0])
+        j = jax.lax.axis_index(cfg.model_axis)
+        dest = _dest_shard(cfg, q)
+        mine = dest == j
+        found, vals = T.lookup(lcfg, st, q)
+        f = jax.lax.psum(jnp.where(mine, found, False).astype(jnp.int32),
+                         cfg.model_axis)
+        v = jax.lax.psum(jnp.where(mine & found, vals, 0), cfg.model_axis)
+        i = jax.lax.axis_index(cfg.data_axis)
+        n_loc = q_blk.shape[0]
+        f_loc = jax.lax.dynamic_slice(f, (i * n_loc,), (n_loc,))
+        v_loc = jax.lax.dynamic_slice(v, (i * n_loc,), (n_loc,))
+        return f_loc > 0, jnp.where(f_loc > 0, v_loc, -1)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(cfg.model_axis), state),
+                  P(cfg.data_axis)),
+        out_specs=(P(cfg.data_axis), P(cfg.data_axis)),
+        check_vma=False,
+    )
+    return fn(state, queries)

@@ -1,0 +1,65 @@
+"""Bit-string hashing utilities for extendible hashing (paper §3).
+
+Extendible hashing treats hash values as bit strings; the top ``depth`` bits
+of a key's hash select its directory entry. All arithmetic is uint32 and
+wrap-around, matching the fixed-width hash keys of the paper.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+HASH_BITS = 32
+# INT32_MIN marks an empty bucket slot. The key space is all int32 except
+# this sentinel (asserted at the API boundary).
+EMPTY_KEY = jnp.int32(-2147483648)
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """MurmurHash3 finalizer: a strong 32-bit mixer (bijective).
+
+    The paper uses TinyMT-generated uniform keys; fmix32 gives us uniform
+    top-bits from arbitrary int32 keys, which is what extendible hashing's
+    prefix addressing needs.
+    """
+    h = x.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def identity_hash(x: jnp.ndarray) -> jnp.ndarray:
+    """Key bits used directly as the hash (tests use this to force layouts)."""
+    return x.astype(jnp.uint32)
+
+
+HASH_FNS = {"fmix32": fmix32, "identity": identity_hash}
+
+
+def prefix(h: jnp.ndarray, depth) -> jnp.ndarray:
+    """Top ``depth`` bits of ``h`` (paper's ``Prefix(key, depth)``).
+
+    ``depth`` may be a traced scalar; depth == 0 yields prefix 0 (shift by the
+    full bit width is undefined in XLA, so it is special-cased).
+    """
+    depth = jnp.asarray(depth, jnp.uint32)
+    shifted = h >> jnp.minimum(jnp.uint32(HASH_BITS) - depth, jnp.uint32(31))
+    return jnp.where(depth == 0, jnp.uint32(0), shifted).astype(jnp.int32)
+
+
+def dir_index(h: jnp.ndarray, dmax: int) -> jnp.ndarray:
+    """Physical directory index: top ``dmax`` bits (static capacity 2**dmax)."""
+    assert 1 <= dmax <= 31
+    return (h >> jnp.uint32(HASH_BITS - dmax)).astype(jnp.int32)
+
+
+def child_bit(h: jnp.ndarray, parent_depth) -> jnp.ndarray:
+    """Bit selecting child 0/1 when a bucket of ``parent_depth`` splits.
+
+    This is bit number ``parent_depth`` (0-indexed from the MSB), i.e. the
+    lowest bit of ``Prefix(key, parent_depth + 1)``.
+    """
+    d = jnp.asarray(parent_depth, jnp.uint32)
+    return ((h >> (jnp.uint32(HASH_BITS - 1) - d)) & jnp.uint32(1)).astype(jnp.int32)

@@ -1,0 +1,105 @@
+"""Structural invariants of the extendible hash table (DESIGN.md §7).
+
+Numpy-side checkers used by the test suite after every transaction; they
+encode the properties the paper's correctness argument rests on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hashing import HASH_BITS
+from repro.core.table import TableConfig, TableState
+
+_EMPTY = -2147483648
+
+
+def _hash_np(cfg: TableConfig, keys: np.ndarray) -> np.ndarray:
+    h = keys.astype(np.uint32)
+    if cfg.hash_name == "identity":
+        return h
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def check_invariants(cfg: TableConfig, state: TableState,
+                     allow_error: bool = False) -> None:
+    """Raises AssertionError with a descriptive message on violation.
+
+    ``allow_error=True`` admits states whose error flag is set by a
+    *legitimate* capacity/depth exhaustion (OVERFLOW) — the structural
+    invariants below must hold regardless."""
+    P, B = cfg.pool_size, cfg.bucket_size
+    d = np.asarray(state.directory)
+    keys = np.asarray(state.keys)
+    live = np.asarray(state.live)
+    bdepth = np.asarray(state.bdepth)
+    bprefix = np.asarray(state.bprefix)
+    depth = int(state.depth)
+    if not allow_error:
+        assert not bool(state.error), "table error flag set"
+
+    # 1. directory entries point at live buckets owning their prefix range
+    owners = d
+    assert owners.min() >= 0 and owners.max() < P, "directory out of pool range"
+    assert live[owners].all(), "directory entry points at a dead bucket"
+    e = np.arange(cfg.dcap)
+    own_depth = bdepth[owners]
+    own_prefix = bprefix[owners]
+    assert ((e >> (cfg.dmax - own_depth)) == own_prefix).all(), \
+        "directory entry not covered by its bucket's prefix"
+
+    # each live bucket referenced by the directory owns its FULL range
+    for bid in np.unique(owners):
+        dd, pp = int(bdepth[bid]), int(bprefix[bid])
+        start = pp << (cfg.dmax - dd)
+        end = (pp + 1) << (cfg.dmax - dd)
+        assert (d[start:end] == bid).all(), f"bucket {bid} range not contiguous"
+    # every live bucket is reachable
+    assert set(np.unique(owners)) == set(np.nonzero(live[:P])[0]), \
+        "live set != directory-reachable set"
+
+    # 2. items hash into their bucket; no intra-bucket duplicates
+    for bid in np.unique(owners):
+        row = keys[bid]
+        occ = row != _EMPTY
+        ks = row[occ]
+        assert len(np.unique(ks)) == len(ks), f"duplicate key in bucket {bid}"
+        if len(ks):
+            h = _hash_np(cfg, ks)
+            pref = h >> np.uint32(HASH_BITS - int(bdepth[bid])) if bdepth[bid] else \
+                np.zeros_like(h)
+            assert (pref == np.uint32(bprefix[bid])).all(), \
+                f"key in wrong bucket {bid}"
+        assert occ.sum() <= B
+
+    # 3. depth scalar == max live bucket depth
+    assert depth == int(bdepth[live][: P + 1].max() if live[:P].any() else 0), \
+        "depth scalar out of sync"
+
+    # 4. buckets depths never exceed the directory capacity
+    assert (bdepth[live] <= cfg.dmax).all()
+
+    # 5. allocator consistency: live ∩ free = ∅, live ∪ free ⊆ [0, nalloc)
+    free = np.asarray(state.free_stack)[: int(state.free_top)]
+    live_ids = np.nonzero(live[:P])[0]
+    assert not set(free) & set(live_ids), "freed bucket still live"
+    if len(free):
+        assert free.max() < int(state.nalloc)
+    assert live_ids.max(initial=-1) < int(state.nalloc)
+
+
+def to_dict(cfg: TableConfig, state: TableState) -> dict:
+    """Materialize the table's key→value map (test-side view)."""
+    keys = np.asarray(state.keys)
+    vals = np.asarray(state.vals)
+    live = np.asarray(state.live)
+    out = {}
+    for bid in np.nonzero(live[: cfg.pool_size])[0]:
+        occ = keys[bid] != _EMPTY
+        for k, v in zip(keys[bid][occ], vals[bid][occ]):
+            out[int(k)] = int(v)
+    return out

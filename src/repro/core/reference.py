@@ -1,0 +1,197 @@
+"""Paper-literal sequential oracle for the wait-free extendible hash table.
+
+This is a direct Python transcription of the paper's pseudocode semantics
+(Figures 5 & 6) executed sequentially: each operation is applied atomically
+in a given order; an update that finds its destination bucket full FAILs,
+splits the bucket (SplitBucket + DirectoryUpdate, repeatedly while the new
+destination is full — the ApplyPendingResize while-loop), and then applies.
+
+It is used to (a) check single-op sequential equivalence of the JAX table,
+and (b) enumerate legal linearizations for small concurrent batches, i.e. a
+genuine linearizability test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+HASH_BITS = 32
+EMPTY = None
+
+TRUE, FALSE = 1, 0
+OVERFLOW = -3
+
+
+def _fmix32(x: int) -> int:
+    h = x & 0xFFFFFFFF
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & 0xFFFFFFFF
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & 0xFFFFFFFF
+    h ^= h >> 16
+    return h
+
+
+def _identity(x: int) -> int:
+    return x & 0xFFFFFFFF
+
+
+_HASHES = {"fmix32": _fmix32, "identity": _identity}
+
+
+@dataclasses.dataclass
+class Bucket:
+    depth: int
+    prefix: int
+    items: Dict[int, int]  # ordered dict ≈ slot array (insertion order)
+
+
+class SeqExtHash:
+    """Sequential extendible hash table with the paper's exact rules:
+
+    * Insert is an upsert; returns TRUE iff the key was absent.
+    * Delete returns TRUE iff the key was present.
+    * No update (not even Delete) executes on a full bucket: it splits the
+      destination until non-full, then applies (ExecOnBucket/FAIL rule).
+    * Splits are local; the directory doubles only when a new bucket's depth
+      exceeds the current directory depth.
+    """
+
+    def __init__(self, dmax: int, bucket_size: int, initial_depth: int = 0,
+                 hash_name: str = "fmix32"):
+        self.dmax = dmax
+        self.b = bucket_size
+        self.hash = _HASHES[hash_name]
+        self.depth = initial_depth
+        nb = 1 << initial_depth
+        self.buckets: List[Bucket] = [
+            Bucket(initial_depth, p, {}) for p in range(nb)
+        ]
+        # physical directory at full capacity (mirrors the static-capacity
+        # adaptation; logically only the top `depth` bits are meaningful,
+        # and both views are kept consistent by construction)
+        self.dir: List[int] = [
+            e >> (dmax - initial_depth) for e in range(1 << dmax)
+        ]
+        self.split_count = 0
+
+    # -- helpers -----------------------------------------------------------
+    def _entry(self, key: int) -> int:
+        return self.hash(key) >> (HASH_BITS - self.dmax)
+
+    def _bucket_of(self, key: int) -> Bucket:
+        return self.buckets[self.dir[self._entry(key)]]
+
+    def _split(self, bid: int) -> None:
+        old = self.buckets[bid]
+        assert old.depth < self.dmax, "hash bits exhausted"
+        d1 = old.depth + 1
+        b0 = Bucket(d1, old.prefix * 2, {})
+        b1 = Bucket(d1, old.prefix * 2 + 1, {})
+        for k, v in old.items.items():
+            bit = (self.hash(k) >> (HASH_BITS - d1)) & 1
+            (b1 if bit else b0).items[k] = v
+        i0 = len(self.buckets)
+        self.buckets.append(b0)
+        self.buckets.append(b1)
+        start = old.prefix << (self.dmax - old.depth)
+        half = 1 << (self.dmax - d1)
+        for e in range(start, start + half):
+            self.dir[e] = i0
+        for e in range(start + half, start + 2 * half):
+            self.dir[e] = i0 + 1
+        self.depth = max(self.depth, d1)
+        self.split_count += 1
+
+    # -- operations ---------------------------------------------------------
+    def lookup(self, key: int) -> Tuple[bool, int]:
+        bkt = self._bucket_of(key)
+        if key in bkt.items:
+            return True, bkt.items[key]
+        return False, -1
+
+    def insert(self, key: int, value: int) -> int:
+        while True:
+            bid = self.dir[self._entry(key)]
+            bkt = self.buckets[bid]
+            if len(bkt.items) < self.b:
+                existed = key in bkt.items
+                bkt.items[key] = value
+                return FALSE if existed else TRUE
+            if bkt.depth >= self.dmax:
+                return OVERFLOW
+            self._split(bid)
+
+    def delete(self, key: int) -> int:
+        while True:
+            bid = self.dir[self._entry(key)]
+            bkt = self.buckets[bid]
+            if len(bkt.items) < self.b:
+                if key in bkt.items:
+                    del bkt.items[key]
+                    return TRUE
+                return FALSE
+            if bkt.depth >= self.dmax:
+                return OVERFLOW
+            self._split(bid)
+
+    def merge(self, parent_prefix: int, parent_depth: int) -> bool:
+        """Merge the two buddies of `parent` if both non-full & fit."""
+        d1 = parent_depth + 1
+        if d1 > self.dmax:
+            return False
+        shift = self.dmax - d1
+        e0 = (parent_prefix * 2) << shift
+        e1 = (parent_prefix * 2 + 1) << shift
+        i0, i1 = self.dir[e0], self.dir[e1]
+        b0, b1 = self.buckets[i0], self.buckets[i1]
+        if i0 == i1 or b0.depth != d1 or b1.depth != d1:
+            return False
+        if len(b0.items) >= self.b or len(b1.items) >= self.b:
+            return False
+        if len(b0.items) + len(b1.items) > self.b:
+            return False
+        merged = Bucket(parent_depth, parent_prefix, {})
+        merged.items.update(b0.items)
+        merged.items.update(b1.items)
+        mid = len(self.buckets)
+        self.buckets.append(merged)
+        start = parent_prefix << (self.dmax - parent_depth)
+        for e in range(start, start + (1 << (self.dmax - parent_depth))):
+            self.dir[e] = mid
+        self.depth = max(
+            b.depth for i, b in enumerate(self.buckets) if i in set(self.dir)
+        )
+        return True
+
+    # -- views ---------------------------------------------------------------
+    def as_dict(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for bid in set(self.dir):
+            out.update(self.buckets[bid].items)
+        return out
+
+    def layout(self) -> Dict[int, Tuple[int, int, frozenset]]:
+        """entry → (bucket depth, prefix, item set); for structural equality."""
+        out = {}
+        for e, bid in enumerate(self.dir):
+            b = self.buckets[bid]
+            out[e] = (b.depth, b.prefix, frozenset(b.items.items()))
+        return out
+
+
+def run_sequential(ops, dmax: int, bucket_size: int, initial_depth: int = 0,
+                   hash_name: str = "fmix32") -> Tuple[SeqExtHash, List[int]]:
+    """Apply (kind, key, value) triples in order; kind ∈ {'ins','del'}."""
+    t = SeqExtHash(dmax, bucket_size, initial_depth, hash_name)
+    statuses = []
+    for kind, key, value in ops:
+        if kind == "ins":
+            statuses.append(t.insert(key, value))
+        elif kind == "del":
+            statuses.append(t.delete(key))
+        else:
+            raise ValueError(kind)
+    return t, statuses

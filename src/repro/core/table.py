@@ -1,0 +1,555 @@
+"""WF-Ext: the paper's wait-free resizable extendible hash table, in JAX.
+
+The shared-memory algorithm (announce in ``help[]`` → PSim combining → CAS
+install) is mapped onto the TPU execution model as a **batched combining
+transaction**: a batch of n lanes plays the role of the n announced threads,
+one ``apply_batch`` call plays the role of a combiner that applies *all*
+announced operations and installs the new state. See DESIGN.md §2 for the
+full mapping table; the essential preserved properties are
+
+  rule (A)  lookups are pure gathers on an immutable snapshot — zero sync;
+  rule (B)  ops on distinct buckets never interact (grouped combining);
+  wait-freedom  every op completes within statically bounded control flow
+               (``max_rounds`` combining rounds; no unbounded retries);
+  exactly-once  per-lane sequence numbers gate application, as in the
+               paper's ``results[i].seqnum`` test (lines 55/103);
+  resize rules  full buckets are immutable (no update — not even Delete —
+               runs on a full bucket); splits re-route and re-execute the
+               pending ops that forced them (``ApplyPendingResize``).
+
+Directory doubling is *logical* over a static-capacity directory (2**dmax
+physical entries, each always pointing at its owning bucket) because jit
+requires static shapes — this makes doubling O(1) and keeps every resize
+action local, strengthening the paper's locality argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import EMPTY_KEY, HASH_FNS, child_bit, dir_index
+
+# Operation kinds (paper's Operation.type, plus an inactive lane marker).
+NOP = 0
+INS = 1
+DEL = 2
+
+# Result status codes. TRUE/FALSE match the paper's semantics:
+#   Insert → TRUE iff the key was newly inserted (FALSE = value updated);
+#   Delete → TRUE iff the key was present.
+FALSE = 0
+TRUE = 1
+PENDING = -1   # transient only; never escapes apply_batch unless `error`
+FROZEN = -2    # op targeted a frozen bucket (caller must run the merge)
+OVERFLOW = -3  # split impossible: bucket already at dmax (hash bits spent)
+
+
+@dataclasses.dataclass(frozen=True)
+class TableConfig:
+    """Static configuration (hashable → usable as a jit static argument)."""
+
+    dmax: int = 8           # max directory depth; capacity = 2**dmax entries
+    bucket_size: int = 8    # b: fixed items per bucket (paper uses 8)
+    pool_size: int = 256    # bucket pool rows (the "heap" for BState slabs)
+    n_lanes: int = 16       # n: lanes per combining transaction ("threads")
+    hash_name: str = "fmix32"
+    hash_shift: int = 0     # drop this many top hash bits (sharded tables:
+                            # the shard id consumed them — core/dist.py)
+    initial_depth: int = 0  # start with 2**initial_depth buckets
+    max_rounds: int = 0     # 0 → dmax + 2 (structural wait-freedom bound)
+
+    def __post_init__(self):
+        assert 1 <= self.dmax <= 20
+        assert self.initial_depth <= self.dmax
+        assert self.pool_size >= (1 << self.initial_depth)
+
+    @property
+    def dcap(self) -> int:
+        return 1 << self.dmax
+
+    @property
+    def rounds(self) -> int:
+        # Each round either applies every still-pending op or strictly
+        # deepens a full destination bucket; depth ≤ dmax bounds the chain.
+        return self.max_rounds if self.max_rounds > 0 else self.dmax + 2
+
+    @property
+    def hash_fn(self):
+        base = HASH_FNS[self.hash_name]
+        if self.hash_shift:
+            shift = self.hash_shift
+            return lambda x: base(x) << shift
+        return base
+
+
+class TableState(NamedTuple):
+    """Device-resident table state. Row ``pool_size`` is a write-trash row
+    (masked scatters land there), so pool arrays have pool_size+1 rows."""
+
+    directory: jnp.ndarray   # i32[dcap]   physical entry → bucket id
+    depth: jnp.ndarray       # i32[]       logical directory depth
+    keys: jnp.ndarray        # i32[P+1, B] EMPTY_KEY = free slot
+    vals: jnp.ndarray        # i32[P+1, B]
+    bdepth: jnp.ndarray      # i32[P+1]    bucket depth
+    bprefix: jnp.ndarray     # i32[P+1]    top-`bdepth` bits
+    live: jnp.ndarray        # bool[P+1]
+    frozen: jnp.ndarray      # bool[P+1]   merge freezing (paper §4.5)
+    nalloc: jnp.ndarray      # i32[]       pool watermark
+    free_stack: jnp.ndarray  # i32[P+1]    freed bucket ids (local heap reuse)
+    free_top: jnp.ndarray    # i32[]
+    applied_seq: jnp.ndarray # i32[n]      paper: results[i].seqnum
+    last_status: jnp.ndarray # i8[n]       paper: results[i].status
+    error: jnp.ndarray       # bool[]      capacity/depth exhaustion flag
+
+
+class OpBatch(NamedTuple):
+    """The announce array: one op per lane (paper's ``help[n]``)."""
+
+    kind: jnp.ndarray   # i32[n] in {NOP, INS, DEL}
+    key: jnp.ndarray    # i32[n]
+    value: jnp.ndarray  # i32[n]
+    seq: jnp.ndarray    # i32[n] per-lane opSeqnum
+
+
+class BatchResult(NamedTuple):
+    status: jnp.ndarray  # i8[n]
+    error: jnp.ndarray   # bool[]
+
+
+# ---------------------------------------------------------------------------
+# construction
+
+
+def init_table(cfg: TableConfig) -> TableState:
+    P, B, n = cfg.pool_size, cfg.bucket_size, cfg.n_lanes
+    nb = 1 << cfg.initial_depth
+    shift = cfg.dmax - cfg.initial_depth
+    directory = (jnp.arange(cfg.dcap, dtype=jnp.int32) >> shift).astype(jnp.int32)
+    live = jnp.zeros(P + 1, bool).at[:nb].set(True)
+    return TableState(
+        directory=directory,
+        depth=jnp.int32(cfg.initial_depth),
+        keys=jnp.full((P + 1, B), EMPTY_KEY, jnp.int32),
+        vals=jnp.zeros((P + 1, B), jnp.int32),
+        bdepth=jnp.zeros(P + 1, jnp.int32).at[:nb].set(cfg.initial_depth),
+        bprefix=jnp.zeros(P + 1, jnp.int32).at[:nb].set(jnp.arange(nb, dtype=jnp.int32)),
+        live=live,
+        frozen=jnp.zeros(P + 1, bool),
+        nalloc=jnp.int32(nb),
+        free_stack=jnp.zeros(P + 1, jnp.int32),
+        free_top=jnp.int32(0),
+        applied_seq=jnp.zeros(n, jnp.int32),
+        last_status=jnp.zeros(n, jnp.int8),
+        error=jnp.asarray(False),
+    )
+
+
+# ---------------------------------------------------------------------------
+# rule (A): synchronization-free lookups
+
+
+def lookup(cfg: TableConfig, state: TableState, queries: jnp.ndarray):
+    """Paper lines 32-35, vectorized: a pure gather on an immutable snapshot.
+
+    Returns (found bool[m], values i32[m]). No combining machinery is ever
+    touched — this is literally the sequential lookup code.
+    """
+    h = cfg.hash_fn(queries)
+    b = state.directory[dir_index(h, cfg.dmax)]          # htl.dir[Prefix(..)]
+    rows_k = state.keys[b]                               # bs.items
+    rows_v = state.vals[b]
+    eq = rows_k == queries[:, None]
+    found = eq.any(axis=-1)
+    slot = jnp.argmax(eq, axis=-1)
+    val = jnp.take_along_axis(rows_v, slot[:, None], axis=-1)[:, 0]
+    return found, jnp.where(found, val, -1)
+
+
+# ---------------------------------------------------------------------------
+# the combining transaction
+
+
+def _route(cfg: TableConfig, state_directory, keys):
+    h = cfg.hash_fn(keys)
+    return h, state_directory[dir_index(h, cfg.dmax)]
+
+
+def _bucket_counts(keys):
+    return (keys != EMPTY_KEY).sum(axis=-1).astype(jnp.int32)
+
+
+def _wave_ranks(cfg: TableConfig, bucket: jnp.ndarray, pending: jnp.ndarray):
+    """Rank of each pending op within its destination-bucket group.
+
+    Sorting by (bucket, lane) — stable argsort on bucket — fixes the
+    linearization order of a combining round: lane order within a bucket,
+    matching a legal PSim helping schedule.
+    """
+    n = cfg.n_lanes
+    sort_key = jnp.where(pending, bucket, jnp.int32(cfg.pool_size + 1))
+    order = jnp.argsort(sort_key, stable=True)
+    sorted_b = sort_key[order]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones(1, bool), sorted_b[1:] != sorted_b[:-1]])
+    start = jax.lax.cummax(jnp.where(is_start, iota, -1))
+    rank_sorted = iota - start
+    rank = jnp.zeros(n, jnp.int32).at[order].set(rank_sorted)
+    return jnp.where(pending, rank, jnp.int32(-1))
+
+
+def _wave_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
+    """Apply every pending op whose destination allows it (ApplyWFOp).
+
+    Ops are applied in waves: wave w executes the w-th op of every bucket
+    group simultaneously — disjoint buckets progress fully in parallel
+    (design rule B), while within a bucket the paper's sequential helping
+    order is preserved. An op that finds its bucket full stays pending and
+    is handed to the split pass (the paper's FAIL → ResizeWF path).
+    """
+    P, B, n = cfg.pool_size, cfg.bucket_size, cfg.n_lanes
+    _, bucket = _route(cfg, st.directory, ops.key)
+    rank = _wave_ranks(cfg, bucket, pending)   # -1 for idle lanes
+    n_waves = rank.max() + 1                   # 0 waves if nothing pending
+
+    def body(carry):
+        w, keys, vals, pending, status, applied_seq = carry
+        sel = pending & (rank == w)
+        row = jnp.where(sel, bucket, jnp.int32(P))       # trash row if idle
+        rows_k = keys[row]                               # [n, B]
+        rows_v = vals[row]
+        occ = rows_k != EMPTY_KEY
+        cnt = occ.sum(axis=-1)
+        frozen = st.frozen[row]
+        full = cnt == B
+        eq = rows_k == ops.key[:, None]
+        exist = eq.any(axis=-1)
+        slot_eq = jnp.argmax(eq, axis=-1)
+        slot_free = jnp.argmax(~occ, axis=-1)
+
+        is_ins = ops.kind == INS
+        # paper ExecOnBucket: the full test comes FIRST — no update (not
+        # even Delete) runs on a full bucket; frozen likewise blocks.
+        frozen_hit = sel & frozen
+        blocked = sel & full & ~frozen
+        apply_ = sel & ~full & ~frozen
+
+        write_slot = jnp.where(is_ins, jnp.where(exist, slot_eq, slot_free), slot_eq)
+        do_write = apply_ & (is_ins | exist)             # DEL of absent: no-op
+        new_key = jnp.where(is_ins, ops.key, EMPTY_KEY)
+        new_val = jnp.where(is_ins, ops.value, 0)
+
+        wrow = jnp.where(do_write, row, jnp.int32(P))
+        keys = keys.at[wrow, write_slot].set(jnp.where(do_write, new_key, EMPTY_KEY))
+        vals = vals.at[wrow, write_slot].set(jnp.where(do_write, new_val, 0))
+
+        op_status = jnp.where(is_ins, ~exist, exist).astype(jnp.int8)
+        status = jnp.where(apply_, op_status, status)
+        status = jnp.where(frozen_hit, jnp.int8(FROZEN), status)
+        done = apply_ | frozen_hit
+        applied_seq = jnp.where(done, ops.seq, applied_seq)
+        pending = pending & ~done
+        return w + 1, keys, vals, pending, status, applied_seq
+
+    def cond(carry):
+        return carry[0] < n_waves
+
+    _, keys, vals, pending, status, applied_seq = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), st.keys, st.vals, pending, status, st.applied_seq)
+    )
+    return st._replace(keys=keys, vals=vals, applied_seq=applied_seq), pending, status
+
+
+def _alloc_pairs(cfg: TableConfig, st: TableState, k):
+    """Allocate 2*k bucket ids: pop the free stack first (local-heap reuse,
+    paper §5), then advance the watermark. Returns (ids[2*MS], st)."""
+    MS = cfg.n_lanes
+    j = jnp.arange(2 * MS, dtype=jnp.int32)
+    from_stack = j < st.free_top
+    stack_idx = jnp.clip(st.free_top - 1 - j, 0, cfg.pool_size)
+    ids = jnp.where(from_stack, st.free_stack[stack_idx], st.nalloc + j - st.free_top)
+    need = 2 * k
+    pop = jnp.minimum(need, st.free_top)
+    grow = need - pop
+    error = st.error | (st.nalloc + grow > cfg.pool_size)
+    return ids, st._replace(
+        free_top=st.free_top - pop,
+        nalloc=jnp.minimum(st.nalloc + grow, jnp.int32(cfg.pool_size)),
+        error=error,
+    )
+
+
+def _split_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
+    """SplitBucket + DirectoryUpdate + ApplyPendingResize's re-routing.
+
+    Every full bucket targeted by a still-pending op is split once; pending
+    ops re-route through the updated directory on the next round. At most
+    n buckets can need splitting (each requires a pending op), so the pass
+    is statically sized at n splits.
+    """
+    P, B, n = cfg.pool_size, cfg.bucket_size, cfg.n_lanes
+    _, bucket = _route(cfg, st.directory, ops.key)
+    counts = _bucket_counts(st.keys)
+
+    needs = jnp.zeros(P + 1, bool).at[jnp.where(pending, bucket, P)].set(True)
+    needs = needs & st.live & ~st.frozen & (counts == B)
+    needs = needs.at[P].set(False)
+    # a bucket already at dmax cannot split: the hash bits are exhausted —
+    # same failure mode as the paper running out of key bits.
+    stuck = needs & (st.bdepth >= cfg.dmax)
+    splittable = needs & (st.bdepth < cfg.dmax)
+    # ops whose destination is stuck terminate with OVERFLOW (boundedness).
+    op_stuck = pending & stuck[bucket]
+    status = jnp.where(op_stuck, jnp.int8(OVERFLOW), status)
+    applied_seq = jnp.where(op_stuck, ops.seq, st.applied_seq)
+    pending = pending & ~op_stuck
+    st = st._replace(error=st.error | stuck.any(), applied_seq=applied_seq)
+
+    iota = jnp.arange(P + 1, dtype=jnp.int32)
+    split_ids = jnp.sort(jnp.where(splittable, iota, jnp.int32(P)))[:n]
+    valid = split_ids < P
+    k = valid.sum().astype(jnp.int32)
+
+    ids_all, st = _alloc_pairs(cfg, st, k)
+    rankpos = jnp.arange(n, dtype=jnp.int32)
+    id0 = jnp.where(valid, ids_all[2 * rankpos], jnp.int32(P))
+    id1 = jnp.where(valid, ids_all[2 * rankpos + 1], jnp.int32(P))
+
+    # --- SplitBucket: redistribute parent items by the (depth+1)-th bit ---
+    pk = st.keys[split_ids]                      # [n, B]
+    pv = st.vals[split_ids]
+    pd = st.bdepth[split_ids]
+    pp = st.bprefix[split_ids]
+    occ = pk != EMPTY_KEY
+    bit = child_bit(cfg.hash_fn(pk), pd[:, None])
+    to0 = occ & (bit == 0)
+    to1 = occ & (bit == 1)
+
+    def compact(mask, src, fill):
+        pos = jnp.where(mask, jnp.cumsum(mask, axis=-1) - 1, B)  # B = trash col
+        out = jnp.full((n, B + 1), fill, src.dtype)
+        out = out.at[jnp.arange(n)[:, None], pos].set(jnp.where(mask, src, fill))
+        return out[:, :B]
+
+    c0k, c0v = compact(to0, pk, EMPTY_KEY), compact(to0, pv, 0)
+    c1k, c1v = compact(to1, pk, EMPTY_KEY), compact(to1, pv, 0)
+
+    keys = st.keys.at[id0].set(c0k).at[id1].set(c1k)
+    vals = st.vals.at[id0].set(c0v).at[id1].set(c1v)
+    bdepth = st.bdepth.at[id0].set(pd + 1).at[id1].set(pd + 1)
+    bprefix = st.bprefix.at[id0].set(pp * 2).at[id1].set(pp * 2 + 1)
+    live = st.live.at[id0].set(True).at[id1].set(True)
+    frozen = st.frozen.at[id0].set(False).at[id1].set(False)
+
+    # retire parents: dead + pushed on the free stack for reuse next rounds
+    dead_ids = jnp.where(valid, split_ids, jnp.int32(P))
+    live = live.at[dead_ids].set(False)
+    live = live.at[P].set(False)
+    push_pos = jnp.where(valid, st.free_top + jnp.cumsum(valid) - 1, P)
+    free_stack = st.free_stack.at[push_pos].set(split_ids)
+    free_top = st.free_top + k
+
+    # --- DirectoryUpdate: one vectorized pass over the physical entries ---
+    is_split = jnp.zeros(P + 1, bool).at[dead_ids].set(True).at[P].set(False)
+    c0_of = iota.at[dead_ids].set(id0)
+    c1_of = iota.at[dead_ids].set(id1)
+    # physical midpoint of the parent's directory range
+    mid_of = jnp.zeros(P + 1, jnp.int32).at[dead_ids].set(
+        ((pp * 2 + 1) << jnp.maximum(cfg.dmax - (pd + 1), 0)).astype(jnp.int32)
+    )
+    own = st.directory
+    e = jnp.arange(cfg.dcap, dtype=jnp.int32)
+    new_dir = jnp.where(
+        is_split[own], jnp.where(e < mid_of[own], c0_of[own], c1_of[own]), own
+    )
+    # logical doubling: a scalar bump — the physical directory is static
+    depth = jnp.maximum(st.depth, jnp.max(jnp.where(valid, pd + 1, 0)))
+
+    st = st._replace(
+        directory=new_dir, depth=depth, keys=keys, vals=vals, bdepth=bdepth,
+        bprefix=bprefix, live=live, frozen=frozen, free_stack=free_stack,
+        free_top=free_top,
+    )
+    return st, pending, status
+
+
+def apply_batch(cfg: TableConfig, state: TableState, ops: OpBatch):
+    """One wait-free combining transaction over the announced op batch.
+
+    Bounded rounds of [apply-what-fits → split-full-destinations]; round
+    count is static (cfg.rounds ≈ dmax + 2), the TPU analogue of the paper's
+    bounded-step guarantee. Replayed sequence numbers (seq ≤ applied_seq)
+    are not re-executed — they return the stored result, the exactly-once
+    test of paper lines 55/103.
+    """
+    n = cfg.n_lanes
+    assert ops.kind.shape == (n,)
+    fresh = (ops.kind != NOP) & (ops.seq > state.applied_seq)
+    replay = (ops.kind != NOP) & ~fresh
+    status0 = jnp.full(n, PENDING, jnp.int8)
+
+    def round_body(carry):
+        r, st, pending, status = carry
+        st, pending, status = _wave_pass(cfg, st, ops, pending, status)
+        st, pending, status = jax.lax.cond(
+            pending.any(),
+            lambda st_, pend_, stat_: _split_pass(cfg, st_, ops, pend_, stat_),
+            lambda st_, pend_, stat_: (st_, pend_, stat_),
+            st, pending, status,
+        )
+        return r + 1, st, pending, status
+
+    def round_cond(carry):
+        r, _, pending, _ = carry
+        return (r < cfg.rounds) & pending.any()
+
+    _, st, pending, status = jax.lax.while_loop(
+        round_cond, round_body, (jnp.int32(0), state, fresh, status0)
+    )
+    # wait-freedom: pending must be empty within the static round bound —
+    # anything left means capacity exhaustion, flagged, never spun on.
+    st = st._replace(error=st.error | pending.any())
+    status = jnp.where(replay, st.last_status, status)
+    final_status = jnp.where(ops.kind == NOP, st.last_status, status)
+    st = st._replace(last_status=final_status)
+    return st, BatchResult(status=final_status, error=st.error)
+
+
+# ---------------------------------------------------------------------------
+# convenience wrappers (announce helpers)
+
+
+def make_ops(cfg: TableConfig, state: TableState, kinds, keys, values=None):
+    """Build an OpBatch with fresh per-lane sequence numbers."""
+    kinds = jnp.asarray(kinds, jnp.int32)
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.zeros_like(keys) if values is None else jnp.asarray(values, jnp.int32)
+    seq = state.applied_seq + 1
+    return OpBatch(kind=kinds, key=keys, value=values, seq=seq)
+
+
+def insert_batch(cfg: TableConfig, state: TableState, keys, values):
+    ops = make_ops(cfg, state, jnp.full((cfg.n_lanes,), INS, jnp.int32), keys, values)
+    return apply_batch(cfg, state, ops)
+
+
+def delete_batch(cfg: TableConfig, state: TableState, keys):
+    ops = make_ops(cfg, state, jnp.full((cfg.n_lanes,), DEL, jnp.int32), keys)
+    return apply_batch(cfg, state, ops)
+
+
+def table_size(state: TableState) -> jnp.ndarray:
+    occ = (state.keys != EMPTY_KEY).sum(axis=-1)
+    return jnp.where(state.live, occ, 0).sum()
+
+
+# ---------------------------------------------------------------------------
+# merging & freezing (paper §4.5)
+
+
+def freeze_buddies(cfg: TableConfig, state: TableState, parent_prefix, parent_depth):
+    """Freeze the two buddy buckets of a would-be parent (prefix order —
+    the paper's deadlock-avoidance rule). Fails (returns ok=False) if either
+    buddy is full, already frozen, or not at depth parent_depth+1."""
+    d1 = parent_depth + 1
+    h_shift = cfg.dmax - d1
+    e0 = (parent_prefix * 2) << h_shift
+    e1 = (parent_prefix * 2 + 1) << h_shift
+    b0 = state.directory[e0]
+    b1 = state.directory[e1]
+    counts = _bucket_counts(state.keys)
+    ok = (
+        (b0 != b1)
+        & (state.bdepth[b0] == d1) & (state.bdepth[b1] == d1)
+        & ~state.frozen[b0] & ~state.frozen[b1]
+        & (counts[b0] < cfg.bucket_size) & (counts[b1] < cfg.bucket_size)
+        & (counts[b0] + counts[b1] <= cfg.bucket_size)
+    )
+    frozen = state.frozen.at[jnp.where(ok, b0, cfg.pool_size)].set(True)
+    frozen = frozen.at[jnp.where(ok, b1, cfg.pool_size)].set(True)
+    frozen = frozen.at[cfg.pool_size].set(False)
+    return state._replace(frozen=frozen), ok
+
+
+def merge_buddies(cfg: TableConfig, state: TableState, parent_prefix, parent_depth):
+    """Merge two frozen buddies back into their parent (ResizeWF merge path).
+
+    Runs as one atomic transaction: freeze → merge → unfreeze. Returns
+    (state, ok). Directory depth shrinks logically (recomputed scalar).
+    """
+    P, B = cfg.pool_size, cfg.bucket_size
+    state, ok = freeze_buddies(cfg, state, parent_prefix, parent_depth)
+    d1 = parent_depth + 1
+    shift = cfg.dmax - d1
+    e0 = (parent_prefix * 2) << shift
+    e1 = (parent_prefix * 2 + 1) << shift
+    b0 = state.directory[e0]
+    b1 = state.directory[e1]
+
+    # allocate the parent bucket
+    have_free = state.free_top > 0
+    new_id = jnp.where(have_free, state.free_stack[jnp.maximum(state.free_top - 1, 0)],
+                       state.nalloc)
+    error = state.error | (~have_free & (state.nalloc >= P) & ok)
+    new_id = jnp.where(ok, new_id, jnp.int32(P))
+    free_top = jnp.where(ok & have_free, state.free_top - 1, state.free_top)
+    nalloc = jnp.where(ok & ~have_free, jnp.minimum(state.nalloc + 1, P), state.nalloc)
+
+    k0, v0 = state.keys[b0], state.vals[b0]
+    k1, v1 = state.keys[b1], state.vals[b1]
+    occ0 = k0 != EMPTY_KEY
+    occ1 = k1 != EMPTY_KEY
+    pos0 = jnp.where(occ0, jnp.cumsum(occ0) - 1, B)
+    base = occ0.sum()
+    pos1 = jnp.where(occ1, base + jnp.cumsum(occ1) - 1, B)
+    mk = jnp.full(B + 1, EMPTY_KEY, jnp.int32).at[pos0].set(jnp.where(occ0, k0, EMPTY_KEY))
+    mk = mk.at[pos1].set(jnp.where(occ1, k1, EMPTY_KEY))[:B]
+    mv = jnp.zeros(B + 1, jnp.int32).at[pos0].set(jnp.where(occ0, v0, 0))
+    mv = mv.at[pos1].set(jnp.where(occ1, v1, 0))[:B]
+
+    keys = state.keys.at[new_id].set(jnp.where(ok, mk, state.keys[new_id]))
+    vals = state.vals.at[new_id].set(jnp.where(ok, mv, state.vals[new_id]))
+    bdepth = state.bdepth.at[new_id].set(jnp.where(ok, parent_depth, state.bdepth[new_id]))
+    bprefix = state.bprefix.at[new_id].set(jnp.where(ok, parent_prefix, state.bprefix[new_id]))
+    live = state.live.at[new_id].set(True)
+    dead0 = jnp.where(ok, b0, jnp.int32(P))
+    dead1 = jnp.where(ok, b1, jnp.int32(P))
+    live = live.at[dead0].set(False).at[dead1].set(False).at[P].set(False)
+    # unfreeze (merged children die frozen; parent starts unfrozen)
+    frozen = state.frozen.at[dead0].set(False).at[dead1].set(False)
+    frozen = frozen.at[new_id].set(False).at[P].set(False)
+    # push children on the free stack
+    push0 = jnp.where(ok, free_top, jnp.int32(P))
+    push1 = jnp.where(ok, free_top + 1, jnp.int32(P))
+    free_stack = state.free_stack.at[push0].set(b0).at[push1].set(b1)
+    free_top = jnp.where(ok, free_top + 2, free_top)
+
+    # directory: the parent's whole range points at the merged bucket
+    e = jnp.arange(cfg.dcap, dtype=jnp.int32)
+    in_range = ok & ((e >> jnp.maximum(cfg.dmax - parent_depth, 0)) == parent_prefix)
+    directory = jnp.where(in_range, new_id, state.directory)
+    # logical shrink: recompute the depth scalar from live buckets
+    depth = jnp.max(jnp.where(live, bdepth, 0))
+
+    st = state._replace(
+        directory=directory, depth=depth, keys=keys, vals=vals, bdepth=bdepth,
+        bprefix=bprefix, live=live, frozen=frozen, nalloc=nalloc,
+        free_stack=free_stack, free_top=free_top, error=error,
+    )
+    return st, ok
+
+
+def build_table_fns(cfg: TableConfig):
+    """Jitted closures over a static config (the public fast-path API)."""
+    return {
+        "init": partial(init_table, cfg),
+        "lookup": jax.jit(partial(lookup, cfg)),
+        "apply_batch": jax.jit(partial(apply_batch, cfg), donate_argnums=0),
+        "insert_batch": jax.jit(partial(insert_batch, cfg), donate_argnums=0),
+        "delete_batch": jax.jit(partial(delete_batch, cfg), donate_argnums=0),
+        "merge_buddies": jax.jit(partial(merge_buddies, cfg), donate_argnums=0),
+        "size": jax.jit(table_size),
+    }

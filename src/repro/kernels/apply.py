@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: the grouped combining apply (PSim hot path).
+
+The paper's combiner applies *all announced pending ops* to a private copy
+of a bucket state. On TPU, the combiner is a kernel program: ops arrive
+pre-sorted by (bucket, lane) — the linearization order — and pre-partitioned
+into G groups of disjoint pool ranges. Grid step g owns pool rows
+[g·PC, (g+1)·PC): design rule (B) is structural, groups never touch each
+other's rows. Within a group the kernel walks its ops serially (the
+combiner IS serial in PSim) but each op's bucket-row update is a vectorized
+B-lane op; dynamic row addressing uses `pl.dslice` dynamic slices (TPU-legal,
+unlike gathers). The pool blocks are aliased in/out, so the "install" is an
+in-place VMEM update — the CAS-free analogue of PSim's pointer swap.
+
+Ops that hit a full bucket report ST_FULL and are left for the outer split
+pass (the paper's FAIL → ResizeWF slow path); the kernel never resizes.
+
+VMEM per program (PC=512, B=8, M=n_lanes ops): pool chunk 2·512·8·4 = 32 KiB,
+op tile ~4·M·4 B → well under budget; B is padded to the 128-lane register
+tile by the compiler.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import EMPTY_KEY, ST_FULL, ST_IDLE  # noqa: F401
+
+_EMPTY = -2147483648  # python int: kernels must not close over traced constants
+
+
+def _apply_kernel(kind_ref, key_ref, val_ref, bid_ref, pk_in, pv_in,
+                  pk_ref, pv_ref, status_ref, *, pc: int, bsize: int):
+    g = pl.program_id(0)
+    # the pool chunk travels through aliased in/out blocks; copy-in once
+    pk_ref[...] = pk_in[...]
+    pv_ref[...] = pv_in[...]
+    m = kind_ref.shape[1]
+
+    def body(i, _):
+        kind = kind_ref[0, i]
+        key = key_ref[0, i]
+        value = val_ref[0, i]
+        local = bid_ref[0, i] - g * pc
+
+        row_k = pl.load(pk_ref, (pl.dslice(local, 1), slice(None)))  # [1, B]
+        row_v = pl.load(pv_ref, (pl.dslice(local, 1), slice(None)))
+        occ = row_k != _EMPTY
+        full = occ.all()
+        eq = row_k == key
+        exist = eq.any()
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (1, bsize), 1)
+        slot_eq = jnp.sum(jnp.where(eq, lanes, 0))
+        slot_free = jnp.min(jnp.where(occ, bsize, lanes))
+
+        is_ins = kind == 1
+        is_del = kind == 2
+        active = is_ins | is_del
+        blocked = active & full
+        do_write = active & ~full & (is_ins | exist)
+        slot = jnp.where(is_ins, jnp.where(exist, slot_eq, slot_free), slot_eq)
+        sel = (lanes == slot) & do_write
+        new_k = jnp.where(sel, jnp.where(is_ins, key, _EMPTY), row_k)
+        new_v = jnp.where(sel, jnp.where(is_ins, value, 0), row_v)
+        pl.store(pk_ref, (pl.dslice(local, 1), slice(None)), new_k)
+        pl.store(pv_ref, (pl.dslice(local, 1), slice(None)), new_v)
+
+        s = jnp.where(is_ins, (~exist).astype(jnp.int8), exist.astype(jnp.int8))
+        s = jnp.where(blocked, jnp.int8(ST_FULL), s)
+        s = jnp.where(active, s, jnp.int8(ST_IDLE))
+        status_ref[0, i] = s
+        return 0
+
+    jax.lax.fori_loop(0, m, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("pc", "interpret"))
+def grouped_apply(kinds, keys, values, bucket_ids, pool_keys, pool_vals, *,
+                  pc: int = 512, interpret: bool = True):
+    """Combining apply of ops pre-sorted by (bucket, lane).
+
+    The wrapper partitions ops into pool-range groups of PC rows, pads each
+    group to the batch width, runs the kernel over the group grid, and
+    unscatters statuses. Returns (pool_keys', pool_vals', status i8[M]).
+    """
+    M = kinds.shape[0]
+    P, B = pool_keys.shape
+    p_pad = -P % pc
+    pk = jnp.pad(pool_keys, ((0, p_pad), (0, 0)), constant_values=EMPTY_KEY)
+    pv = jnp.pad(pool_vals, ((0, p_pad), (0, 0)))
+    G = (P + p_pad) // pc
+
+    group = jnp.where(kinds != 0, bucket_ids // pc, G)           # G = idle bin
+    order = jnp.argsort(group, stable=True)                      # keeps (b, lane)
+    gs = group[order]
+    iota = jnp.arange(M, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones(1, bool), gs[1:] != gs[:-1]])
+    start = jax.lax.cummax(jnp.where(is_start, iota, -1))
+    rank = iota - start
+    # scatter ops into [G+1, M] padded tiles (row G collects idle lanes)
+    gk = jnp.zeros((G + 1, M), jnp.int32).at[gs, rank].set(kinds[order])
+    gkey = jnp.zeros((G + 1, M), jnp.int32).at[gs, rank].set(keys[order])
+    gval = jnp.zeros((G + 1, M), jnp.int32).at[gs, rank].set(values[order])
+    # padded slots default to their group's base row (kind=0 → no-op read,
+    # but the dynamic slice index must stay in range)
+    gbase = jnp.broadcast_to(
+        (jnp.arange(G + 1, dtype=jnp.int32) * pc)[:, None], (G + 1, M))
+    gbid = gbase.at[gs, rank].set(bucket_ids[order])
+
+    pk_out, pv_out, gstatus = pl.pallas_call(
+        functools.partial(_apply_kernel, pc=pc, bsize=B),
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, M), lambda g: (g, 0)),      # kinds
+            pl.BlockSpec((1, M), lambda g: (g, 0)),      # keys
+            pl.BlockSpec((1, M), lambda g: (g, 0)),      # values
+            pl.BlockSpec((1, M), lambda g: (g, 0)),      # bucket ids
+            pl.BlockSpec((pc, B), lambda g: (g, 0)),     # pool keys chunk
+            pl.BlockSpec((pc, B), lambda g: (g, 0)),     # pool vals chunk
+        ],
+        out_specs=[
+            pl.BlockSpec((pc, B), lambda g: (g, 0)),
+            pl.BlockSpec((pc, B), lambda g: (g, 0)),
+            pl.BlockSpec((1, M), lambda g: (g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(pk.shape, jnp.int32),
+            jax.ShapeDtypeStruct(pv.shape, jnp.int32),
+            jax.ShapeDtypeStruct((G, M), jnp.int8),
+        ],
+        interpret=interpret,
+    )(gk[:G], gkey[:G], gval[:G], gbid[:G], pk, pv)
+
+    # unscatter: op at sorted position i lives at (gs[i], rank[i])
+    valid = gs < G
+    st_sorted = jnp.where(valid, gstatus[jnp.minimum(gs, G - 1), rank],
+                          jnp.int8(ST_IDLE))
+    status = jnp.full(M, ST_IDLE, jnp.int8).at[order].set(st_sorted)
+    return pk_out[:P], pv_out[:P], status

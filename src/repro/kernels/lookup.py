@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: the sync-free bucket probe (design rule A hot path).
+
+Lookups are the paper's most frequent operation; its design rule (A) demands
+they run with zero synchronization. On TPU the probe is a *gather* problem:
+query → pool row → B-way compare. GPUs would scatter-gather; the TPU-native
+idiom is a **tiled one-hot contraction on the MXU**: a [TQ, PC] one-hot of
+local bucket ids multiplied into the [PC, B] pool chunk materializes the
+gathered rows in registers, with the grid tiling the (queries × pool) space
+so each chunk's working set sits in VMEM. Exactly one pool chunk contains a
+query's row, so per-chunk partial results combine by addition — the kernel
+accumulates over the pool-chunk grid dimension.
+
+VMEM budget per program (defaults TQ=256, PC=512, B=8, int32):
+  queries  256·4          =   1 KiB
+  pool     512·8·4·2      =  32 KiB
+  one-hot  256·512·4      = 512 KiB   (fp32 operand for the MXU)
+  out      256·(1+1)·4    =   2 KiB
+→ ~0.6 MiB of 16 MiB VMEM; MXU tiles are (128,128)-aligned by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import EMPTY_KEY  # noqa: F401 (API re-export)
+
+_EMPTY = -2147483648  # python int: kernels must not close over traced constants
+
+
+def _probe_kernel(q_ref, b_ref, pk_ref, pv_ref, found_ref, val_ref, *, pc: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        found_ref[...] = jnp.zeros_like(found_ref)
+        val_ref[...] = jnp.zeros_like(val_ref)
+
+    q = q_ref[...]                      # [TQ]
+    b = b_ref[...]                      # [TQ] global bucket ids
+    keys = pk_ref[...]                  # [PC, B]
+    vals = pv_ref[...]                  # [PC, B]
+
+    local = b - j * pc
+    in_chunk = (local >= 0) & (local < pc)
+    tq = q.shape[0]
+    # one-hot gather via the MXU: [TQ, PC] @ [PC, B] → [TQ, B].
+    # fp32 matmuls are exact only up to 2**24, so 32-bit payloads are split
+    # into 16-bit halves (two exact fp32 contractions) and recombined.
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tq, pc), 1)
+    onehot = ((iota == local[:, None]) & in_chunk[:, None]).astype(jnp.float32)
+
+    def gather32(x):
+        xu = x.astype(jnp.uint32)
+        hi = (xu >> 16).astype(jnp.float32)
+        lo = (xu & jnp.uint32(0xFFFF)).astype(jnp.float32)
+        ghi = jax.lax.dot_general(onehot, hi, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        glo = jax.lax.dot_general(onehot, lo, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        out = (ghi.astype(jnp.uint32) << 16) | glo.astype(jnp.uint32)
+        return out.astype(jnp.int32)
+
+    rows_k = gather32(keys)
+    rows_v = gather32(vals)
+
+    eq = in_chunk[:, None] & (rows_k == q[:, None]) & (q[:, None] != _EMPTY)
+    hit = eq.any(axis=-1)
+    val = jnp.sum(jnp.where(eq, rows_v, 0), axis=-1)
+    found_ref[...] += hit.astype(jnp.int32)
+    val_ref[...] += val
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "pc", "interpret"))
+def probe(bucket_ids: jnp.ndarray, queries: jnp.ndarray, pool_keys: jnp.ndarray,
+          pool_vals: jnp.ndarray, *, tq: int = 256, pc: int = 512,
+          interpret: bool = True):
+    """Probe pool rows for `queries` routed to `bucket_ids`.
+
+    Pads N to a multiple of tq and P to a multiple of pc; returns
+    (found bool[N], vals i32[N] with -1 for misses).
+    """
+    n = queries.shape[0]
+    p, b = pool_keys.shape
+    n_pad = -n % tq
+    p_pad = -p % pc
+    q = jnp.pad(queries, (0, n_pad), constant_values=EMPTY_KEY)
+    bid = jnp.pad(bucket_ids, (0, n_pad))
+    pk = jnp.pad(pool_keys, ((0, p_pad), (0, 0)), constant_values=EMPTY_KEY)
+    pv = jnp.pad(pool_vals, ((0, p_pad), (0, 0)))
+    grid = ((n + n_pad) // tq, (p + p_pad) // pc)
+
+    found, val = pl.pallas_call(
+        functools.partial(_probe_kernel, pc=pc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),         # queries
+            pl.BlockSpec((tq,), lambda i, j: (i,)),         # bucket ids
+            pl.BlockSpec((pc, b), lambda i, j: (j, 0)),     # pool keys chunk
+            pl.BlockSpec((pc, b), lambda i, j: (j, 0)),     # pool vals chunk
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, bid, pk, pv)
+    found = found[:n] > 0
+    return found, jnp.where(found, val[:n], -1)

@@ -1,0 +1,94 @@
+"""Jit'd public wrappers over the Pallas kernels + table integration.
+
+`kernel_lookup` / `kernel_apply` run the paper's two hot paths through the
+TPU kernels (interpret=True on CPU, compiled on TPU). `apply_batch_kernel`
+is the fast-path transaction: routing + kernel combiner, falling back to the
+table's split pass only when a bucket overflows — mirroring the paper's
+fast (ApplyWFOp) / slow (ResizeWF) structure.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import table as T
+from repro.core.hashing import dir_index
+from repro.kernels import apply as kapply
+from repro.kernels import lookup as klookup
+from repro.kernels.ref import ST_FULL
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("cfg", "interpret"))
+def kernel_lookup(cfg: T.TableConfig, state: T.TableState, queries, *,
+                  interpret: bool | None = None):
+    """Rule-A lookup through the Pallas probe kernel."""
+    interpret = _on_cpu() if interpret is None else interpret
+    h = cfg.hash_fn(queries)
+    bid = state.directory[dir_index(h, cfg.dmax)]
+    pc = min(512, cfg.pool_size)
+    tq = min(256, max(8, queries.shape[0]))
+    return klookup.probe(bid, queries, state.keys[:-1], state.vals[:-1],
+                         tq=tq, pc=pc, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("cfg", "interpret"), donate_argnums=1)
+def apply_batch_kernel(cfg: T.TableConfig, state: T.TableState, ops: T.OpBatch,
+                       *, interpret: bool | None = None):
+    """Fast-path combining transaction via the Pallas apply kernel.
+
+    1. route ops through the directory (announce);
+    2. kernel combiner applies everything that fits (sorted by bucket, lane);
+    3. ops reported ST_FULL fall back to the reference transaction, which
+       runs the bounded split rounds (the ResizeWF slow path).
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    n = cfg.n_lanes
+    fresh = (ops.kind != T.NOP) & (ops.seq > state.applied_seq)
+    replay = (ops.kind != T.NOP) & ~fresh
+
+    h = cfg.hash_fn(ops.key)
+    bid = state.directory[dir_index(h, cfg.dmax)]
+    kinds = jnp.where(fresh, ops.kind, 0)
+    # sort by (bucket, lane) = linearization order; stable keeps lane order
+    order = jnp.argsort(jnp.where(fresh, bid, jnp.int32(cfg.pool_size + 1)),
+                        stable=True)
+    inv = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    pc = min(512, cfg.pool_size)
+    pk, pv, status_sorted = kapply.grouped_apply(
+        kinds[order], ops.key[order], ops.value[order], bid[order],
+        state.keys[:-1], state.vals[:-1], pc=pc, interpret=interpret)
+    status = status_sorted[inv]
+
+    st = state._replace(
+        keys=state.keys.at[:-1].set(pk),
+        vals=state.vals.at[:-1].set(pv),
+        applied_seq=jnp.where(fresh & (status != ST_FULL), ops.seq,
+                              state.applied_seq),
+    )
+
+    # slow path: only ops that hit a full bucket re-enter the reference
+    # transaction (which splits); everyone else is masked to NOP
+    need_slow = fresh & (status == ST_FULL)
+    slow_ops = T.OpBatch(
+        kind=jnp.where(need_slow, ops.kind, T.NOP),
+        key=ops.key, value=ops.value, seq=ops.seq)
+
+    def run_slow(st):
+        st2, res2 = T.apply_batch(cfg, st, slow_ops)
+        return st2, res2.status
+
+    def skip(st):
+        return st, status.astype(jnp.int8)
+
+    st, slow_status = jax.lax.cond(need_slow.any(), run_slow, skip, st)
+    final = jnp.where(need_slow, slow_status, status).astype(jnp.int8)
+    final = jnp.where(replay, state.last_status, final)
+    final = jnp.where(ops.kind == T.NOP, st.last_status, final)
+    st = st._replace(last_status=final)
+    return st, T.BatchResult(status=final, error=st.error)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These mirror the kernels' contracts exactly (same inputs/outputs, same FAIL
+semantics) so that kernel sweeps can assert_allclose against them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY_KEY = jnp.int32(-2147483648)
+
+# status codes shared with the apply kernel
+ST_IDLE = -1
+ST_FALSE = 0
+ST_TRUE = 1
+ST_FULL = -3   # op hit a full bucket → outer split pass takes over
+
+
+def probe_ref(bucket_ids: jnp.ndarray, queries: jnp.ndarray,
+              pool_keys: jnp.ndarray, pool_vals: jnp.ndarray):
+    """Oracle for the lookup/probe kernel.
+
+    bucket_ids i32[N] — destination pool row per query (pre-routed);
+    queries    i32[N];
+    pool_keys  i32[P, B]; pool_vals i32[P, B].
+    Returns (found bool[N], vals i32[N] — -1 where absent).
+    """
+    rows_k = pool_keys[bucket_ids]
+    rows_v = pool_vals[bucket_ids]
+    eq = rows_k == queries[:, None]
+    found = eq.any(-1)
+    slot = jnp.argmax(eq, -1)
+    val = jnp.take_along_axis(rows_v, slot[:, None], -1)[:, 0]
+    return found, jnp.where(found, val, -1)
+
+
+def apply_ref(kinds: jnp.ndarray, keys: jnp.ndarray, values: jnp.ndarray,
+              bucket_ids: jnp.ndarray, pool_keys: jnp.ndarray,
+              pool_vals: jnp.ndarray):
+    """Oracle for the combining-apply kernel.
+
+    Ops are applied **in index order** (the kernel requires ops pre-sorted by
+    (bucket, lane); order within the array is the linearization order).
+    kinds i32[M]: 0=idle, 1=insert(upsert), 2=delete.
+    Returns (pool_keys', pool_vals', status i8[M]).
+
+    Paper semantics: the full test comes first — no update (not even Delete)
+    applies to a full bucket (status=ST_FULL; handled by the split pass).
+    """
+    B = pool_keys.shape[1]
+
+    def body(i, carry):
+        pk, pv, status = carry
+        kind = kinds[i]
+        b = bucket_ids[i]
+        row_k = pk[b]
+        row_v = pv[b]
+        occ = row_k != EMPTY_KEY
+        full = occ.all()
+        eq = row_k == keys[i]
+        exist = eq.any()
+        slot_eq = jnp.argmax(eq)
+        slot_free = jnp.argmax(~occ)
+        is_ins = kind == 1
+        is_del = kind == 2
+        active = is_ins | is_del
+        blocked = active & full
+        do_write = active & ~full & (is_ins | exist)
+        slot = jnp.where(is_ins, jnp.where(exist, slot_eq, slot_free), slot_eq)
+        nk = jnp.where(is_ins, keys[i], EMPTY_KEY)
+        nv = jnp.where(is_ins, values[i], 0)
+        pk = pk.at[b, slot].set(jnp.where(do_write, nk, row_k[slot]))
+        pv = pv.at[b, slot].set(jnp.where(do_write, nv, row_v[slot]))
+        s = jnp.where(is_ins, (~exist).astype(jnp.int8), exist.astype(jnp.int8))
+        s = jnp.where(blocked, jnp.int8(ST_FULL), s)
+        s = jnp.where(active, s, jnp.int8(ST_IDLE))
+        status = status.at[i].set(s)
+        return pk, pv, status
+
+    M = kinds.shape[0]
+    status = jnp.full(M, ST_IDLE, jnp.int8)
+    return jax.lax.fori_loop(0, M, body, (pool_keys, pool_vals, status))

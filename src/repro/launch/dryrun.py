@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count at first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver
+  1. builds ShapeDtypeStruct inputs (configs/shapes.input_specs — no
+     allocation) and a state struct via jax.eval_shape,
+  2. jits the step with explicit in/out shardings on the production mesh,
+  3. .lower().compile() — sharding mismatches, unsupported collectives, or
+     OOM-at-compile are BUGS and fail the cell,
+  4. records memory_analysis(), cost_analysis(), and collective bytes
+     parsed from the optimized HLO into artifacts/<cell>.json — the §Dry-run
+     and §Roofline sections of EXPERIMENTS.md are generated from these.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+      --shape train_4k [--multi-pod] [--out artifacts]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cell_supported, get_config, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import batch_shardings, state_shardings
+from repro.models.model import ModelConfig, decode_step, forward
+from repro.training.train_step import TrainConfig, init_train_state, train_step
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+from benchmarks.costmodel import (analytic_costs, collective_bytes_scaled,
+                                  param_count)
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link (~per-chip usable for ring/all-1D)
+
+
+def model_flops_per_step(cfg: ModelConfig, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for training,
+    2·N_active·D for inference steps (N excludes embedding tables)."""
+    d = cfg.d_model
+    per_layer = 0
+    if cfg.has_attn():
+        per_layer += d * cfg.n_heads * cfg.head_dim * 2
+        per_layer += d * cfg.n_kv_heads * cfg.head_dim * 2
+    if cfg.has_ssm():
+        per_layer += d * (2 * cfg.d_inner + 2 * cfg.ssm_state +
+                          cfg.ssm_heads) + cfg.d_inner * d
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        per_layer += 3 * d * cfg.d_ff
+    elif cfg.mlp_kind == "moe":
+        per_layer += 3 * d * cfg.d_ff * (cfg.top_k + cfg.n_shared_experts)
+    n_active = cfg.n_layers * per_layer
+    n_active += cfg.padded_vocab * d  # unembed
+    if cfg.enc_layers:
+        n_active += cfg.enc_layers * (per_layer + 3 * d * cfg.d_ff)
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    mult = 6 if shape.mode == "train" else 2
+    return float(mult) * n_active * tokens
+
+
+VARIANTS = {
+    # §Perf beyond-paper decode optimizations (baseline = no variant)
+    "kvq8": {"kv_quant": "int8"},
+    "bf16psum": {"decode_bf16_partials": True},
+    "kvq8+bf16psum": {"kv_quant": "int8", "decode_bf16_partials": True},
+    "winslice": {"decode_window_slice": True},
+    "winslice+kvq8": {"decode_window_slice": True, "kv_quant": "int8"},
+    "winslice+kvq8+bf16psum": {"decode_window_slice": True,
+                               "kv_quant": "int8",
+                               "decode_bf16_partials": True},
+    "paged": {},   # decode via the WF-Ext paged serving engine (cell C)
+    # contraction-dim sharding of indivisible-head attention params
+    "dshard": {"_shard_opts": {"attn_dshard": True}},
+    "winslice+kvq8+dshard": {"decode_window_slice": True, "kv_quant": "int8",
+                             "_shard_opts": {"attn_dshard": True}},
+}
+
+
+def build_step(arch: str, shape_name: str, mesh, variant: str = ""):
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    shard_opts = {}
+    if variant:
+        overrides = dict(VARIANTS[variant])
+        shard_opts = overrides.pop("_shard_opts", {})
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    specs = input_specs(arch, shape_name, cfg)
+    tc = TrainConfig()
+
+    if shape.mode == "train":
+        state_struct = jax.eval_shape(
+            partial(init_train_state, cfg), jax.random.key(0))
+        st_sh = state_shardings(mesh, state_struct, **shard_opts)
+        b_sh = batch_shardings(mesh, specs)
+
+        def step(state, batch):
+            return train_step(cfg, tc, state, batch)
+
+        jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                         donate_argnums=0)
+        return jitted, (state_struct, specs), cfg
+
+    if shape.mode == "prefill":
+        params_struct = jax.eval_shape(
+            lambda k: init_train_state(cfg, k).params, jax.random.key(0))
+        p_sh = state_shardings(mesh, params_struct, **shard_opts)
+        b_sh = batch_shardings(mesh, specs)
+
+        def step(params, batch):
+            logits, _ = forward(cfg, params, batch, differentiable=False)
+            return logits
+
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        return jitted, (params_struct, specs), cfg
+
+    # decode
+    params_struct = jax.eval_shape(
+        lambda k: init_train_state(cfg, k).params, jax.random.key(0))
+    p_sh = state_shardings(mesh, params_struct, **shard_opts)
+
+    if variant == "paged":
+        # the paper-integrated serving path: page table = WF-Ext table
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.serving import engine as E
+        from repro.serving.kvcache import PagedState
+        shape = SHAPES[shape_name]
+        pc = E.make_paged_config(cfg, batch=shape.global_batch,
+                                 max_len=shape.seq_len)
+        est_struct = jax.eval_shape(lambda: E.init_engine(cfg, pc))
+        ba = tuple(n for n in ("pod", "data") if n in mesh.shape)
+
+        def est_spec(path_key, leaf):
+            if path_key in ("pages_k", "pages_v"):
+                # [L, NP, page, KV, hd]: pages over batch axes, KV over model
+                kv_ok = leaf.shape[3] % mesh.shape.get("model", 1) == 0
+                return P(None, ba, None, "model" if kv_ok else None, None)
+            if path_key in ("lengths", "seq_ids", "tokens"):
+                return P(ba) if leaf.shape[0] % (
+                    mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)) == 0 \
+                    else P()
+            return P()  # table state + allocator: replicated (small)
+
+        flat, tdef = jax.tree_util.tree_flatten_with_path(est_struct)
+        # NamedTuple fields flatten to GetAttrKey: normalize to bare names
+        est_sh = tdef.unflatten([
+            NamedSharding(mesh, est_spec(
+                jax.tree_util.keystr(p).split(".")[-1].strip("'[]"), leaf))
+            for p, leaf in flat])
+
+        def step(est, params):
+            return E.serve_step.__wrapped__(cfg, pc, est, params)
+
+        jitted = jax.jit(step, in_shardings=(est_sh, p_sh), donate_argnums=0)
+        return jitted, (est_struct, params_struct), cfg
+
+    cache_spec = specs["cache"]
+    c_sh = batch_shardings(mesh, cache_spec)
+    t_sh = batch_shardings(mesh, {"tokens": specs["tokens"]})["tokens"]
+
+    def step(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens)
+
+    jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
+                     donate_argnums=1)
+    return jitted, (params_struct, cache_spec, specs["tokens"]), cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             variant: str = ""):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{variant}" if variant else ""
+    cell_id = f"{arch}__{shape_name}__{mesh_name}{suffix}"
+    ok, why = cell_supported(arch, shape_name)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "cell": cell_id, "variant": variant}
+    if not ok:
+        record.update(status="skipped", reason=why)
+        _write(out_dir, cell_id, record)
+        print(f"[skip] {cell_id}: {why}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    try:
+        with jax.sharding.set_mesh(mesh):
+            jitted, arg_structs, cfg = build_step(arch, shape_name, mesh,
+                                                  variant)
+            lowered = jitted.lower(*arg_structs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        n_chips = mesh.size
+        model_axis = mesh.shape.get("model", 1)
+        batch_ax = n_chips // model_axis
+        # plausible scan trip counts for while-trip inference
+        trips = (cfg.n_layers, cfg.enc_layers,
+                 max(shape.seq_len // cfg.attn_chunk, 1),
+                 max(shape.seq_len // max(cfg.ssm_chunk, 1), 1))
+        coll, coll_raw = collective_bytes_scaled(hlo, plausible_trips=trips)
+        dshard = "dshard" in (variant or "")
+        ana = analytic_costs(cfg, shape, n_chips, model_axis, batch_ax,
+                             attn_dshard=dshard)
+        mf = model_flops_per_step(cfg, shape)
+        coll_dev = sum(coll.values())
+        roofline = {
+            "compute_s": ana["flops_per_device"] / PEAK_FLOPS,
+            "memory_s": ana["bytes_per_device"] / HBM_BW,
+            "collective_s": coll_dev / ICI_BW,
+        }
+        dom = max(roofline, key=roofline.get)
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            n_chips=n_chips, params=param_count(cfg),
+            memory={
+                "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes_per_device": getattr(mem, "peak_memory_in_bytes", None) or
+                    getattr(mem, "temp_size_in_bytes", 0),
+            },
+            # raw XLA numbers (loop bodies counted once — recorded for
+            # cross-check; the roofline uses the analytic model + the
+            # trip-scaled collective parse, see benchmarks/costmodel.py)
+            hlo_flops_per_device_raw=float(cost.get("flops", 0.0)),
+            hlo_bytes_per_device_raw=float(cost.get("bytes accessed", 0.0)),
+            collective_bytes_per_device=coll,
+            collective_bytes_per_device_unscaled=coll_raw,
+            analytic_flops_per_device=ana["flops_per_device"],
+            analytic_bytes_per_device=ana["bytes_per_device"],
+            roofline=roofline,
+            bottleneck=dom,
+            model_flops=mf,
+            # useful fraction: MODEL_FLOPS / total executed flops
+            model_vs_hlo=mf / (ana["flops_per_device"] * n_chips),
+        )
+        r = roofline
+        print(f"[ok]   {cell_id}  compile={t_compile:.0f}s  "
+              f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+              f"collective={r['collective_s']:.3e}s  dom={dom}  "
+              f"useful={round(record['model_vs_hlo'], 3)}  "
+              f"peak={record['memory']['peak_bytes_per_device']}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        record.update(status="failed", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[FAIL] {cell_id}: {type(e).__name__}: {e}")
+    _write(out_dir, cell_id, record)
+    return record
+
+
+def _write(out_dir, cell_id, record):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="", choices=[""] + sorted(VARIANTS))
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape))
+
+    n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out, args.variant)
+            if rec["status"] == "failed":
+                n_fail += 1
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

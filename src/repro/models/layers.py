@@ -1,0 +1,237 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (flash-chunked,
+causal/sliding-window), gated MLPs. Pure JAX, mesh-aware via sharding
+constraints, bf16 compute with fp32 softmax/norm accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, weight, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, theta=10000.0):
+    """x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attend_block(q, k, v, mask, scale):
+    """One (q-chunk × kv-chunk) attention block with fp32 logits.
+
+    q [B,Tq,H,D], k/v [B,Tk,KV,D] with H = KV*G. Returns unnormalized
+    (out [B,Tq,H,D], row_max [B,H,Tq], row_sum [B,H,Tq])."""
+    B, Tq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)                       # [B,KV,G,Tq]
+    # guard: a fully-masked row has m = -inf; exp(-inf - -inf) would be 1,
+    # so masked entries are zeroed explicitly (required for the static-scan
+    # differentiable path where whole blocks can be masked out)
+    p = jnp.where(logits > NEG_INF * 0.5,
+                  jnp.exp(logits - m[..., None]), 0.0)
+    s = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Tq, H, D), m.reshape(B, KV * G, Tq), s.reshape(B, KV * G, Tq)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, chunk=1024,
+                    differentiable=False):
+    """Memory-bounded attention: outer scan over q chunks, inner bounded
+    fori over kv chunks (dynamic trip count ⇒ ~S²/2 FLOPs for causal, and
+    only the window for sliding-window attention).
+
+    `differentiable=True` switches the inner loop to a static lax.scan with
+    masking (reverse-mode AD cannot cross dynamic fori bounds); training
+    uses that path, inference keeps the skip-ahead loop. `window` may be a
+    *traced* scalar (per-layer window selection inside a layer scan —
+    Hymba's mixed global/SWA layers) or a static int; 0/huge disables the
+    band mask. q [B,S,H,D]; k,v [B,S,KV,D] → [B,S,H,D].
+    """
+    B, S_real, H, D = q.shape
+    KV = k.shape[2]
+    scale = D ** -0.5
+    c = min(chunk, S_real)
+    pad = -S_real % c
+    if pad:  # pad to a chunk multiple; padded keys are masked out below
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = S_real + pad
+    nq = S // c
+    windowed = not (isinstance(window, int) and window == 0)
+    w = jnp.asarray(window if windowed else S, jnp.int32)
+    w = jnp.where(w <= 0, S, w)
+
+    qc = q.reshape(B, nq, c, H, D).transpose(1, 0, 2, 3, 4)   # [nq,B,c,H,D]
+    kc = k.reshape(B, nq, c, KV, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nq, c, KV, D).transpose(1, 0, 2, 3, 4)
+    pos = jnp.arange(S).reshape(nq, c)
+
+    def q_step(carry, xs):
+        qi, q_i = xs
+        acc0 = jnp.zeros((B, c, H, D), jnp.float32)
+        m0 = jnp.full((B, H, c), NEG_INF, jnp.float32)
+        s0 = jnp.zeros((B, H, c), jnp.float32)
+        q_i_pos = jax.lax.dynamic_index_in_dim(pos, qi, 0, keepdims=False)
+
+        lo = jnp.maximum(0, qi - (w + c - 1) // c) if windowed else 0
+
+        def kv_step(j, st):
+            acc, m, s = st
+            k_j = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+            qpos = q_i_pos[:, None]                    # [c,1]
+            kpos = jax.lax.dynamic_index_in_dim(pos, j, 0, keepdims=False)[None, :]
+            mask = kpos <= qpos if causal else jnp.ones((c, c), bool)
+            mask = mask & (kpos < S_real)        # exclude padded keys
+            if windowed:
+                mask = mask & (kpos > qpos - w)
+            KVh, G = k_j.shape[2], H // k_j.shape[2]
+            mask_b = jnp.broadcast_to(mask[None, None, None], (B, KVh, G, c, c))
+            o_j, m_j, s_j = _attend_block(q_i, k_j, v_j, mask_b, scale)
+            m_new = jnp.maximum(m, m_j)
+            alpha = jnp.exp(m - m_new)
+            beta = jnp.exp(m_j - m_new)
+            acc = acc * alpha.transpose(0, 2, 1)[..., None] + \
+                o_j * beta.transpose(0, 2, 1)[..., None]
+            s = s * alpha + s_j * beta
+            return acc, m_new, s
+
+        if differentiable:
+            # static trip count + masking: fully-masked blocks contribute
+            # beta=exp(-inf-m)=0, so correctness is preserved
+            def kv_scan(st, j):
+                return kv_step(j, st), None
+            (acc, m, s), _ = jax.lax.scan(kv_scan, (acc0, m0, s0),
+                                          jnp.arange(nq))
+        else:
+            hi = qi + 1 if causal else nq
+            acc, m, s = jax.lax.fori_loop(lo, hi, kv_step, (acc0, m0, s0))
+        out = acc / jnp.maximum(s.transpose(0, 2, 1)[..., None], 1e-30)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, 0, (jnp.arange(nq), qc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+    return out[:, :S_real]
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window=0,
+                     bf16_partials=False):
+    """Single-position decode: q [B,1,H,D] over caches [B,Smax,KV,D] with
+    valid prefix `length` [B]. `window` may be traced (per-layer selection);
+    0/huge = global. `bf16_partials` accumulates the output contraction in
+    bf16 — when the cache is sequence-sharded the partial-sum all-reduce
+    halves its bytes (§Perf cell B)."""
+    B, Smax, KVh, D = k_cache.shape
+    H = q.shape[2]
+    G = H // KVh
+    scale = D ** -0.5
+    logits = jnp.einsum("bkgd,bskd->bkgs", q[:, 0].reshape(B, KVh, G, D),
+                        k_cache, preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(Smax)[None, :]
+    valid = idx < length[:, None]
+    if not (isinstance(window, int) and window == 0):
+        w = jnp.where(jnp.asarray(window, jnp.int32) <= 0, Smax, window)
+        valid = valid & (idx >= jnp.maximum(length[:, None] - w, 0))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    acc_dt = jnp.bfloat16 if bf16_partials else jnp.float32
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=acc_dt)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def decode_attention_sliced(q, k_win, v_win, kpos, length, *,
+                            bf16_partials=False):
+    """Decode attention over a pre-sliced window of the cache.
+
+    q [B,1,H,D]; k_win/v_win [B,W,KV,D] — the W entries ending at the
+    current position (sliced by the caller so only W·KV·D bytes ever leave
+    HBM — the §Perf cell-1 optimization); kpos [B,W] their absolute
+    positions; length [B]."""
+    B, W, KVh, D = k_win.shape
+    H = q.shape[2]
+    G = H // KVh
+    scale = D ** -0.5
+    logits = jnp.einsum("bkgd,bskd->bkgs", q[:, 0].reshape(B, KVh, G, D),
+                        k_win, preferred_element_type=jnp.float32) * scale
+    valid = kpos < length[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    acc_dt = jnp.bfloat16 if bf16_partials else jnp.float32
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_win.dtype), v_win,
+                     preferred_element_type=acc_dt)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention_block(p, x, positions, *, n_heads, n_kv_heads, head_dim,
+                    causal=True, window=0, chunk=1024, rope_theta=10000.0,
+                    qkv_bias=False, differentiable=False):
+    """Full attention sub-layer (projections + flash attention)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    o = flash_attention(q, k, v, causal=causal, window=window, chunk=chunk,
+                        differentiable=differentiable)
+    o = constrain(o, "batch", None, "model", None)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def cross_attention_block(p, x, memory, *, n_heads, n_kv_heads, head_dim,
+                          chunk=1024):
+    """Encoder-decoder cross attention (no RoPE on memory keys, standard)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    q = constrain(q, "batch", None, "model", None)
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q.reshape(B, S, KV, G, D), k,
+                        preferred_element_type=jnp.float32) * (D ** -0.5)
+    pr = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pr.astype(v.dtype), v)
+    o = o.reshape(B, S, H, D)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def gated_mlp(p, x, *, activation="silu"):
+    """SwiGLU (llama) / GeGLU (gemma) feed-forward."""
+    act = jax.nn.silu if activation == "silu" else \
+        (lambda u: jax.nn.gelu(u, approximate=True))
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * \
+        jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = constrain(h, "batch", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

@@ -1,0 +1,88 @@
+"""Mixture-of-Experts FFN: shared + fine-grained routed experts
+(DeepSeekMoE, arXiv:2401.06066; granite-style top-k).
+
+Dispatch is sort-based (TPU-native: argsort + capacity crop + grouped GEMM),
+not the [T,E,C] one-hot einsum of GShard — at 1M tokens that dispatch tensor
+is impossible; the sorted form keeps memory at O(E·C·D) with dense matmuls
+the MXU likes. Experts shard over the 'model' axis (expert parallelism);
+token arrays shard over 'batch'. Experts are padded up to a multiple of the
+EP degree when needed (granite's 40 → 48) with never-routed dummies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import constrain
+from repro.models.layers import gated_mlp
+
+
+def moe_block(p, x, *, n_experts, top_k, capacity_factor=1.25,
+              n_shared=0, router_z_coef=1e-3):
+    """x [B,S,D] → [B,S,D]; returns (y, aux_loss).
+
+    p: {router [D, E_pad], w_gate/w_up [E_pad, D, F], w_down [E_pad, F, D],
+        shared: optional gated-mlp params with F_shared}.
+    """
+    Bsz, S, Dm = x.shape
+    T = Bsz * S
+    E = n_experts
+    E_pad = p["router"].shape[-1]
+    xt = x.reshape(T, Dm)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if E_pad > E:  # padded dummy experts are never routable
+        logits = jnp.where(jnp.arange(E_pad)[None, :] < E, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, top_k)               # [T,k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses: load-balance (Switch) + router z-loss
+    density = jnp.mean(jax.nn.one_hot(gate_idx, E_pad, dtype=jnp.float32),
+                       axis=(0, 1))
+    mean_probs = probs.mean(0)
+    aux = E * jnp.sum(density * mean_probs)
+    zloss = router_z_coef * jnp.mean(
+        jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux_loss = aux + zloss
+
+    # ---- sort-based dispatch ----
+    cap = int(max(8, -(-capacity_factor * top_k * T // E_pad)))  # ceil, static
+    ef = gate_idx.reshape(-1)                                    # [T*k]
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    wf = gate_w.reshape(-1)
+    order = jnp.argsort(ef, stable=True)
+    ef_s, tok_s, wf_s = ef[order], tok[order], wf[order]
+    iota = jnp.arange(T * top_k, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones(1, bool), ef_s[1:] != ef_s[:-1]])
+    start = jax.lax.cummax(jnp.where(is_start, iota, -1))
+    slot = iota - start                                          # rank in expert
+    keep = slot < cap
+    e_idx = jnp.where(keep, ef_s, E_pad)                         # drop bin
+    s_idx = jnp.where(keep, slot, 0)
+
+    # gather tokens into [E_pad(+drop), cap, D]
+    grouped = jnp.zeros((E_pad + 1, cap, Dm), x.dtype)
+    grouped = grouped.at[e_idx, s_idx].set(
+        jnp.where(keep[:, None], xt[tok_s], 0))
+    grouped = grouped[:E_pad]
+    grouped = constrain(grouped, "model", None, None)
+
+    # grouped expert GEMMs (SwiGLU experts)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", grouped, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", grouped, p["w_up"])
+    h = constrain(h, "model", None, None)
+    y_exp = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    y_exp = constrain(y_exp, "model", None, None)
+
+    # combine back: weighted scatter-add into token rows
+    flat = y_exp.reshape(E_pad * cap, Dm)
+    src = jnp.where(keep, ef_s * cap + s_idx, E_pad * cap - 1)
+    contrib = jnp.where(keep[:, None], flat[src] * wf_s[:, None].astype(x.dtype), 0)
+    y = jnp.zeros((T, Dm), x.dtype).at[tok_s].add(contrib)
+
+    if n_shared:
+        y = y + gated_mlp(p["shared"], x).reshape(T, Dm)
+    y = constrain(y.reshape(Bsz, S, Dm), "batch", None, None)
+    return y, aux_loss

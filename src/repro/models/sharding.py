@@ -1,0 +1,56 @@
+"""Logical-axis sharding helpers for the model stack.
+
+Meshes: single-pod ('data', 'model') = (16, 16); multi-pod
+('pod', 'data', 'model') = (2, 16, 16). Batch shards over ('pod','data');
+tensor/expert parallelism over 'model'. Constraints are emitted only when
+the dimension is divisible by the mesh axis — small archs (smollm's 9 heads,
+granite's 24) legitimately replicate attention while still sharding
+MLP/vocab; the roofline table surfaces the consequences per arch.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def axis_size(name: str) -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or name not in mesh.shape:
+        return 1
+    return mesh.shape[name]
+
+
+def batch_axes():
+    """('pod','data') when a pod axis exists, else ('data',) — or None."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return None
+    names = [n for n in ("pod", "data") if n in mesh.shape]
+    return tuple(names) if names else None
+
+
+def constrain(x, *spec_dims):
+    """with_sharding_constraint that degrades gracefully:
+
+    * no ambient mesh → no-op;
+    * 'model'-sharded dims that don't divide the axis size → replicated;
+    * 'batch' is resolved to ('pod','data') / ('data',).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    resolved = []
+    for dim, name in zip(x.shape, spec_dims):
+        if name is None:
+            resolved.append(None)
+        elif name == "batch":
+            axes = batch_axes()
+            total = 1
+            for a in axes or ():
+                total *= mesh.shape[a]
+            resolved.append(axes if axes and dim % total == 0 else None)
+        else:
+            size = mesh.shape.get(name, 1)
+            resolved.append(name if name in mesh.shape and dim % size == 0
+                            else None)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

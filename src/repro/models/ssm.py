@@ -1,0 +1,146 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Training path uses the chunked SSD algorithm: intra-chunk quadratic form +
+inter-chunk state recurrence (a lax.scan over chunks), which is both the
+published algorithm and the TPU-friendly formulation (dense matmuls per
+chunk, one small recurrence). Decode path is the O(1) recurrent update.
+
+Shapes follow the paper: d_inner = expand·d_model, H = d_inner/headdim heads,
+shared B/C across heads within a group (n_groups=1 here), scalar-per-head A.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import constrain
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk=128):
+    """SSD scan. x [b,S,H,P]; dt [b,S,H]; A [H]; B,C [b,S,N]; D [H].
+
+    Returns y [b,S,H,P]. N = state dim, P = head dim. One lax.scan over
+    chunks carries the inter-chunk state; the [c,c] quadratic form is
+    materialized per chunk only, bounding activation memory at
+    b·c·c·H floats regardless of S.
+    """
+    b, S, H, Pd = x.shape
+    N = B.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+
+    xr = x.reshape(b, nc, c, H, Pd).transpose(1, 0, 2, 3, 4)    # [nc,b,c,H,P]
+    dtr = dt.reshape(b, nc, c, H).transpose(1, 0, 2, 3)
+    Br = B.reshape(b, nc, c, N).transpose(1, 0, 2, 3)
+    Cr = C.reshape(b, nc, c, N).transpose(1, 0, 2, 3)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(h_prev, inputs):
+        xc, dtc, Bc, Cc = inputs                 # [b,c,H,P] [b,c,H] [b,c,N]
+        dA = dtc * A[None, None, :]
+        dA_cum = jnp.cumsum(dA, axis=1)          # [b,c,H]
+        dA_total = dA_cum[:, -1]                 # [b,H]
+
+        # intra-chunk quadratic form: L[i,j] = exp(Σ_{j<k<=i} dA).
+        # mask BEFORE exp: the upper triangle has positive seg whose exp
+        # overflows to inf and poisons the backward pass
+        seg = dA_cum[:, :, None, :] - dA_cum[:, None, :, :]      # [b,c,c,H]
+        seg = jnp.where(causal[None, :, :, None], seg, -1e30)
+        L = jnp.exp(seg)
+        CB = jnp.einsum("bin,bjn->bij", Cc, Bc)                  # [b,c,c]
+        gate = (L * CB[..., None]).astype(xc.dtype)              # [b,c,c,H]
+        y_intra = jnp.einsum("bijh,bjhp,bjh->bihp", gate, xc,
+                             dtc.astype(xc.dtype))
+
+        # contribution of the carried state
+        decay_from_start = jnp.exp(dA_cum).astype(xc.dtype)      # [b,c,H]
+        y_inter = jnp.einsum("bin,bhnp,bih->bihp", Cc, h_prev,
+                             decay_from_start)
+
+        # update carried state
+        decay_to_end = jnp.exp(dA_total[:, None, :] - dA_cum)    # [b,c,H]
+        state = jnp.einsum("bjn,bjh,bjhp->bhnp", Bc,
+                           (decay_to_end * dtc).astype(xc.dtype), xc)
+        h_new = h_prev * jnp.exp(dA_total)[..., None, None].astype(xc.dtype) \
+            + state
+
+        y = y_intra + y_inter + xc * D[None, None, :, None]
+        return h_new, y
+
+    h0 = jnp.zeros((b, H, N, Pd), x.dtype)
+    _, ys = jax.lax.scan(chunk_step, h0, (xr, dtr, Br, Cr))      # [nc,b,c,H,P]
+    return ys.transpose(1, 0, 2, 3, 4).reshape(b, S, H, Pd)
+
+
+def ssm_block(p, x, *, headdim, d_state, chunk=128, conv_width=4):
+    """Full Mamba-2 mixer: in_proj → causal conv → SSD → gate → out_proj.
+
+    p: {in_proj [D, 2*di + 2*N + H], conv [w, di + 2*N], dt_bias [H],
+        A_log [H], D [H], norm [di], out_proj [di, D]}.
+    """
+    Bsz, S, Dm = x.shape
+    H = p["A_log"].shape[0]
+    di = H * headdim
+    N = d_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xbc = constrain(xbc, "batch", None, "model")
+
+    # depthwise causal conv over (x, B, C)
+    w = p["conv"]                                        # [w, di+2N]
+    pad = jnp.pad(xbc, ((0, 0), (conv_width - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * w[i][None, None] for i in range(conv_width))
+    xbc = jax.nn.silu(conv)
+
+    xs, B, C = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = xs.reshape(Bsz, S, H, headdim)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None])   # [b,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+
+    y = ssd_chunked(xs, dt.astype(x.dtype), A, B, C, p["D"], chunk=chunk)
+    y = y.reshape(Bsz, S, di)
+    # gated RMSNorm (mamba-2 uses norm(y * silu(z)))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def ssm_decode_step(p, x, state, conv_state, *, headdim, d_state,
+                    conv_width=4):
+    """O(1) recurrent decode. x [B,1,D]; state [B,H,N,P]; conv_state
+    [B,w-1,di+2N]. Returns (y [B,1,D], state', conv_state')."""
+    Bsz, _, Dm = x.shape
+    H = p["A_log"].shape[0]
+    di = H * headdim
+    N = d_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+
+    xbc_hist = jnp.concatenate([conv_state, xbc], axis=1)  # [B,w,di+2N]
+    w = p["conv"]
+    conv = jnp.einsum("bwe,we->be", xbc_hist, w)[:, None]
+    new_conv_state = xbc_hist[:, 1:]
+    xbc_t = jax.nn.silu(conv)
+
+    xs, B, C = jnp.split(xbc_t, [di, di + N], axis=-1)
+    xs = xs.reshape(Bsz, H, headdim)
+    dt_t = jax.nn.softplus(dt[:, 0] + p["dt_bias"][None])   # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+
+    decay = jnp.exp(dt_t * A[None])                         # [B,H]
+    # h' = decay·h + dt·B⊗x ; y = C·h' + D·x
+    outer = jnp.einsum("bn,bhp->bhnp", B[:, 0], xs) * \
+        dt_t[..., None, None].astype(x.dtype)
+    state = state * decay[..., None, None].astype(x.dtype) + outer
+    y = jnp.einsum("bn,bhnp->bhp", C[:, 0], state) + xs * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, di)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), state, new_conv_state

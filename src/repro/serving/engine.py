@@ -1,0 +1,124 @@
+"""Serving engine: batched decode over the paged (WF-Ext) KV cache.
+
+`serve_step` = one decode iteration for the whole request batch:
+  1. embed current tokens; per layer compute q/k/v,
+  2. append_token writes K/V through the page table (batched wait-free
+     INSERT at block boundaries — the paper's combiner),
+  3. attention reads through gather_kv (rule-A sync-free lookups),
+  4. sample/argmax next tokens.
+Request admission/eviction are table transactions too, so the cache grows
+and shrinks with the live set instead of being preallocated at worst case.
+
+The dense (non-paged) decode path lives in models/model.decode_step and is
+what the dry-run lowers for the decode shape cells; this engine is the
+feature integration + its correctness oracle is the dense path itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.model import ModelConfig
+from repro.serving import kvcache as KV
+from repro.core import table as T
+
+
+class EngineState(NamedTuple):
+    paged: KV.PagedState
+    tokens: jnp.ndarray        # i32[batch] current token per slot
+
+
+def make_paged_config(cfg: ModelConfig, batch: int, max_len: int,
+                      page_size: int = 16) -> KV.PagedConfig:
+    max_blocks = -(-max_len // page_size)
+    n_pages = max_blocks * batch + 8
+    n_pages = -(-n_pages // 512) * 512   # divisible for page-dim sharding
+    # table sized for the worst-case live set, lanes = batch
+    tbl = dataclasses.replace(
+        KV.PagedConfig.__dataclass_fields__["table"].default_factory(),
+        dmax=max(4, (n_pages - 1).bit_length() + 1),
+        pool_size=max(64, 4 * n_pages),
+        n_lanes=max(batch, 16),
+    )
+    return KV.PagedConfig(
+        n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, page_size=page_size, n_pages=n_pages,
+        max_blocks=max_blocks, batch=batch, table=tbl, dtype=cfg.dtype)
+
+
+def init_engine(cfg: ModelConfig, pc: KV.PagedConfig) -> EngineState:
+    return EngineState(
+        paged=KV.init_paged(pc),
+        tokens=jnp.zeros(pc.batch, jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "pc"), donate_argnums=2)
+def serve_step(cfg: ModelConfig, pc: KV.PagedConfig, est: EngineState, params):
+    """One batched decode step over the paged cache. Returns (est', logits).
+
+    One WF-Ext combining transaction allocates the step's pages (block
+    boundaries only) and resolves every slot's destination; the per-layer
+    K/V writes and gathers are then plain indexed ops against the resolved
+    pages — rule-A reads, no further table synchronization."""
+    st = est.paged
+    B = pc.batch
+    x = params["embed"].astype(cfg.jdtype)[est.tokens][:, None]
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.jdtype)
+    pos = st.lengths
+    positions = pos[:, None]
+    active = st.seq_ids >= 0
+
+    # the step's single table transaction + rule-A page-id resolution
+    st, page_cur, offset = KV.allocate_slots(pc, st)
+    blocks = jnp.arange(pc.max_blocks, dtype=jnp.int32)
+    keys = KV._key(st.seq_ids[:, None], blocks[None, :]).reshape(-1)
+    found, page_ids = T.lookup(pc.table, st.table, keys)
+    page_ids = jnp.where(found, page_ids, 0).reshape(B, pc.max_blocks)
+    lengths = st.lengths   # already includes this token
+
+    def layer(carry, xs):
+        x = carry
+        lp, pk_l, pv_l = xs              # pages [NP, page, KV, hd]
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        if cfg.qkv_bias:
+            q = q + lp["attn"]["bq"]
+            k = k + lp["attn"]["bk"]
+            v = v + lp["attn"]["bv"]
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        # write this layer's K/V into the resolved (page, offset) slots
+        wp = jnp.where(active, page_cur, pc.n_pages - 1)
+        pk_l = pk_l.at[wp, offset].set(jnp.where(active[:, None, None],
+                                                 k[:, 0], pk_l[wp, offset]))
+        pv_l = pv_l.at[wp, offset].set(jnp.where(active[:, None, None],
+                                                 v[:, 0], pv_l[wp, offset]))
+        k_c = pk_l[page_ids].reshape(B, pc.max_blocks * pc.page_size,
+                                     pc.n_kv_heads, pc.head_dim)
+        v_c = pv_l[page_ids].reshape(B, pc.max_blocks * pc.page_size,
+                                     pc.n_kv_heads, pc.head_dim)
+        o = L.decode_attention(q, k_c, v_c, lengths, window=cfg.window)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        act = "silu" if cfg.mlp_kind == "swiglu" else "gelu"
+        x = x + L.gated_mlp(lp["mlp"], h, activation=act)
+        return x, (pk_l, pv_l)
+
+    x, (pk_new, pv_new) = jax.lax.scan(
+        layer, x, (params["layers"], st.pages_k, st.pages_v))
+    st = st._replace(pages_k=pk_new, pages_v=pv_new)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.jdtype))[:, 0]
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    active = st.seq_ids >= 0
+    next_tokens = jnp.where(active, next_tokens, 0)
+    return EngineState(paged=st, tokens=next_tokens), logits

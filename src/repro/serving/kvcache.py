@@ -1,0 +1,230 @@
+"""Paged KV cache whose page table IS the paper's wait-free hash table.
+
+vLLM-style paging maps (sequence, block) → physical page through a table
+that grows and shrinks as sequences join/leave the batch. On GPU that table
+is host-managed; here it is **device-resident WF-Ext**: block allocation is
+a batched insert transaction (the PSim combiner), lookups during attention
+are rule-A sync-free gathers, and sequence eviction is a batched delete.
+The extendible directory doubles as the live-set grows — no worst-case
+preallocation of the page-index space.
+
+Key packing: key = (seq_id << BLOCK_BITS) | block_idx (int32; seq_id <
+2^(31-BLOCK_BITS)). Value = physical page id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import table as T
+
+BLOCK_BITS = 12                      # ≤ 4096 blocks/sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedConfig:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    page_size: int = 16              # tokens per page
+    n_pages: int = 256               # physical pages (per layer stacked)
+    max_blocks: int = 32             # max pages gathered per sequence
+    batch: int = 8
+    table: T.TableConfig = dataclasses.field(
+        default_factory=lambda: T.TableConfig(
+            dmax=12, bucket_size=8, pool_size=1024, n_lanes=16))
+    dtype: str = "bfloat16"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+class PagedState(NamedTuple):
+    table: T.TableState          # (seq, block) → page
+    pages_k: jnp.ndarray         # [L, n_pages, page, KV, hd]
+    pages_v: jnp.ndarray
+    page_alloc: jnp.ndarray      # i32[] watermark
+    free_pages: jnp.ndarray      # i32[n_pages] stack
+    free_top: jnp.ndarray        # i32[]
+    lengths: jnp.ndarray         # i32[batch] current length per slot
+    seq_ids: jnp.ndarray         # i32[batch] active sequence id (-1 = empty)
+
+
+def _key(seq_ids, blocks):
+    return (seq_ids << BLOCK_BITS) | blocks
+
+
+def init_paged(pc: PagedConfig) -> PagedState:
+    L = pc.n_layers
+    shape = (L, pc.n_pages, pc.page_size, pc.n_kv_heads, pc.head_dim)
+    return PagedState(
+        table=T.init_table(pc.table),
+        pages_k=jnp.zeros(shape, pc.jdtype),
+        pages_v=jnp.zeros(shape, pc.jdtype),
+        page_alloc=jnp.int32(0),
+        free_pages=jnp.zeros(pc.n_pages, jnp.int32),
+        free_top=jnp.int32(0),
+        lengths=jnp.zeros(pc.batch, jnp.int32),
+        seq_ids=jnp.full(pc.batch, -1, jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames="pc", donate_argnums=1)
+def admit(pc: PagedConfig, st: PagedState, slot_mask, new_seq_ids):
+    """Admit new sequences into empty slots (slot_mask bool[batch])."""
+    seq_ids = jnp.where(slot_mask, new_seq_ids, st.seq_ids)
+    lengths = jnp.where(slot_mask, 0, st.lengths)
+    return st._replace(seq_ids=seq_ids, lengths=lengths)
+
+
+@partial(jax.jit, static_argnames="pc", donate_argnums=1)
+def evict(pc: PagedConfig, st: PagedState, slot_mask):
+    """Evict sequences: batched DELETE of their block mappings (the paper's
+    delete path) + page free-list push."""
+    n = pc.table.n_lanes
+    # delete up to max_blocks mappings per evicted slot, in block batches
+    def del_block(b, carry):
+        st_t, free_pages, free_top = carry
+        keys = _key(jnp.where(slot_mask, st.seq_ids, 0), jnp.full_like(st.seq_ids, b))
+        live = slot_mask & (b * pc.page_size < st.lengths) & (st.seq_ids >= 0)
+        # look up the page first (to free it), then delete the mapping
+        found, page = T.lookup(pc.table, st_t, keys)
+        do = live & found
+        kinds = jnp.where(do, T.DEL, T.NOP).astype(jnp.int32)
+        pad = n - kinds.shape[0]
+        ops = T.make_ops(pc.table, st_t,
+                         jnp.pad(kinds, (0, pad)),
+                         jnp.pad(keys, (0, pad)),
+                         jnp.pad(jnp.zeros_like(keys), (0, pad)))
+        st_t, _ = T.apply_batch(pc.table, st_t, ops)
+        # push freed pages
+        pos = jnp.where(do, free_top + jnp.cumsum(do) - 1, pc.n_pages)
+        free_pages = free_pages.at[jnp.clip(pos, 0, pc.n_pages - 1)].set(
+            jnp.where(do, page, free_pages[jnp.clip(pos, 0, pc.n_pages - 1)]))
+        free_top = free_top + do.sum()
+        return st_t, free_pages, free_top
+
+    st_t, free_pages, free_top = jax.lax.fori_loop(
+        0, pc.max_blocks, del_block,
+        (st.table, st.free_pages, st.free_top))
+    return st._replace(
+        table=st_t, free_pages=free_pages, free_top=free_top,
+        seq_ids=jnp.where(slot_mask, -1, st.seq_ids),
+        lengths=jnp.where(slot_mask, 0, st.lengths))
+
+
+def allocate_slots(pc: PagedConfig, st: PagedState):
+    """One combining transaction per decode step: allocate pages for slots
+    crossing a block boundary (batched WF-Ext INSERT — the paper's n-thread
+    announce), then resolve every slot's current (page, offset) via rule-A
+    lookups. Returns (st', page [B], offset [B])."""
+    B = pc.batch
+    active = st.seq_ids >= 0
+    pos = st.lengths
+    block = pos // pc.page_size
+    offset = pos % pc.page_size
+    need_page = active & (offset == 0)
+
+    take_rank = jnp.cumsum(need_page) - 1
+    from_stack = take_rank < st.free_top
+    sidx = jnp.clip(st.free_top - 1 - take_rank, 0, pc.n_pages - 1)
+    new_page = jnp.where(from_stack, st.free_pages[sidx],
+                         st.page_alloc + take_rank - st.free_top)
+    pop = jnp.minimum(need_page.sum(), st.free_top)
+    grow = need_page.sum() - pop
+
+    keys = _key(st.seq_ids, block)
+    n = pc.table.n_lanes
+    pad = n - B
+    kinds = jnp.where(need_page, T.INS, T.NOP).astype(jnp.int32)
+    ops = T.make_ops(pc.table, st.table,
+                     jnp.pad(kinds, (0, pad)),
+                     jnp.pad(keys, (0, pad)),
+                     jnp.pad(new_page, (0, pad)))
+    table, _res = T.apply_batch(pc.table, st.table, ops)
+
+    found, page = T.lookup(pc.table, table, keys)
+    page = jnp.where(need_page, new_page, page)
+    page = jnp.where(active, page, 0)
+    st = st._replace(table=table, page_alloc=st.page_alloc + grow,
+                     free_top=st.free_top - pop,
+                     lengths=jnp.where(active, pos + 1, pos))
+    return st, page, offset
+
+
+@partial(jax.jit, static_argnames="pc", donate_argnums=1)
+def append_token(pc: PagedConfig, st: PagedState, k_new, v_new):
+    """Write one token's K/V for every active slot; allocates pages at block
+    boundaries through a WF-Ext INSERT transaction (the combiner allocates
+    for all slots in one batched announce — the paper's n-thread case)."""
+    B = pc.batch
+    active = st.seq_ids >= 0
+    pos = st.lengths
+    block = pos // pc.page_size
+    offset = pos % pc.page_size
+    need_page = active & (offset == 0)
+
+    # allocate physical pages for slots starting a fresh block
+    take_rank = jnp.cumsum(need_page) - 1
+    from_stack = take_rank < st.free_top
+    sidx = jnp.clip(st.free_top - 1 - take_rank, 0, pc.n_pages - 1)
+    new_page = jnp.where(from_stack, st.free_pages[sidx],
+                         st.page_alloc + take_rank - st.free_top)
+    pop = jnp.minimum(need_page.sum(), st.free_top)
+    grow = need_page.sum() - pop
+    page_alloc = st.page_alloc + grow
+    free_top = st.free_top - pop
+
+    # announce the new mappings: batched INSERT (seq, block) → page
+    keys = _key(st.seq_ids, block)
+    n = pc.table.n_lanes
+    pad = n - B
+    kinds = jnp.where(need_page, T.INS, T.NOP).astype(jnp.int32)
+    ops = T.make_ops(pc.table, st.table,
+                     jnp.pad(kinds, (0, pad)),
+                     jnp.pad(keys, (0, pad)),
+                     jnp.pad(new_page, (0, pad)))
+    table, _res = T.apply_batch(pc.table, st.table, ops)
+
+    # rule-A lookup of the destination page for every slot
+    found, page = T.lookup(pc.table, table, keys)
+    page = jnp.where(need_page, new_page, page)
+    page = jnp.where(active, page, 0)
+
+    # scatter K/V into pages: k_new [L, B, KV, hd]
+    Lx = pc.n_layers
+    li = jnp.arange(Lx)[:, None]
+    bi = jnp.broadcast_to(page[None, :], (Lx, B))
+    oi = jnp.broadcast_to(offset[None, :], (Lx, B))
+    pages_k = st.pages_k.at[li, bi, oi].set(
+        jnp.where(active[None, :, None, None], k_new, st.pages_k[li, bi, oi]))
+    pages_v = st.pages_v.at[li, bi, oi].set(
+        jnp.where(active[None, :, None, None], v_new, st.pages_v[li, bi, oi]))
+
+    return st._replace(table=table, pages_k=pages_k, pages_v=pages_v,
+                       page_alloc=page_alloc, free_top=free_top,
+                       lengths=jnp.where(active, pos + 1, pos))
+
+
+@partial(jax.jit, static_argnames="pc")
+def gather_kv(pc: PagedConfig, st: PagedState):
+    """Materialize each slot's K/V view [L, B, max_blocks*page, KV, hd] via
+    rule-A lookups (zero synchronization with concurrent allocation)."""
+    B = pc.batch
+    blocks = jnp.arange(pc.max_blocks, dtype=jnp.int32)
+    keys = _key(st.seq_ids[:, None], blocks[None, :]).reshape(-1)
+    found, page = T.lookup(pc.table, st.table, keys)
+    page = jnp.where(found, page, 0).reshape(B, pc.max_blocks)
+    # [L, B, blocks, page, KV, hd]
+    k = st.pages_k[:, page]
+    v = st.pages_v[:, page]
+    Lx = pc.n_layers
+    S = pc.max_blocks * pc.page_size
+    k = k.reshape(Lx, B, S, pc.n_kv_heads, pc.head_dim)
+    v = v.reshape(Lx, B, S, pc.n_kv_heads, pc.head_dim)
+    return k, v, st.lengths

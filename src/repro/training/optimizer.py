@@ -1,0 +1,95 @@
+"""AdamW with fp32 master weights over bf16 params, cosine schedule,
+global-norm clipping. Built from scratch (no optax): the optimizer state
+layout is what the checkpoint/elastic-reshard layer serializes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    master: Any   # fp32 copy of params
+    m: Any        # fp32 first moment
+    v: Any        # fp32 second moment
+    step: jnp.ndarray
+
+
+def init_opt_state(params) -> OptState:
+    # copy=True: fp32 leaves (norm weights) must NOT alias the param buffer,
+    # or donating a TrainState donates the same buffer twice
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def lr_at(cfg: OptConfig, step) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / max(cfg.warmup_steps, 1)
+    decay_t = jnp.clip((step - cfg.warmup_steps)
+                       / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * decay_t))
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, params, grads, opt: OptState):
+    """Returns (new_params_bf16-like, new OptState, metrics)."""
+    step = opt.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return m, v, new_master
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    flat_ma = treedef.flatten_up_to(opt.master)
+    out = [upd(g, m, v, ma) for g, m, v, ma in
+           zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype),
+                              new_master, params)
+    metrics = {"lr": lr, "grad_norm": gnorm, "clip_scale": scale}
+    return new_params, OptState(new_master, new_m, new_v, step), metrics

@@ -1,0 +1,99 @@
+"""Training step: loss (CE + z-loss + MoE aux), grad-accumulation
+microbatching, AdamW update. One jit-compiled function per (config, mesh);
+all distribution is expressed through sharding constraints + in_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, forward, init_params
+from repro.models.sharding import constrain
+from repro.training.optimizer import OptConfig, OptState, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1          # gradient-accumulation steps
+    z_loss: float = 1e-4
+    moe_aux: float = 1e-2
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(cfg: ModelConfig, rng) -> TrainState:
+    params = init_params(cfg, rng)
+    return TrainState(params=params, opt=init_opt_state(params))
+
+
+def loss_fn(cfg: ModelConfig, tc: TrainConfig, params, batch):
+    logits, aux = forward(cfg, params, batch)
+    targets = batch["targets"]
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab rows out of the softmax
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    zl = tc.z_loss * jnp.square(lse).mean()
+    loss = ce + zl + tc.moe_aux * aux
+    return loss, {"ce": ce, "z_loss": zl, "moe_aux": aux}
+
+
+def train_step(cfg: ModelConfig, tc: TrainConfig, state: TrainState,
+               batch: Dict[str, jnp.ndarray]):
+    """One optimizer step (with optional microbatch accumulation).
+
+    batch arrays lead with the global batch dim; microbatching reshapes to
+    [n_micro, B/n_micro, ...] and lax.scan-accumulates grads (fp32).
+    """
+    n_micro = tc.microbatches
+
+    def one_micro(params, mb):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, tc, p, mb), has_aux=True)(params)
+        return loss, parts, grads
+
+    if n_micro == 1:
+        loss, parts, grads = one_micro(state.params, batch)
+    else:
+        def resh(x):
+            return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+        mbs = jax.tree.map(resh, batch)
+
+        def scan_body(acc, mb):
+            loss_a, grads_a = acc
+            loss, parts, grads = one_micro(state.params, mb)
+            grads = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                 grads_a, grads)
+            return (loss_a + loss, grads), parts
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+        (loss_sum, grads), parts = jax.lax.scan(
+            scan_body, (jnp.float32(0), zero_g), mbs)
+        loss = loss_sum / n_micro
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        parts = jax.tree.map(lambda x: x[-1], parts)
+
+    new_params, new_opt, om = adamw_update(tc.opt, state.params, grads,
+                                           state.opt)
+    metrics = {"loss": loss, **parts, **om}
+    return TrainState(new_params, new_opt), metrics
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Jittable closure (donates the train state)."""
+    def step(state, batch):
+        return train_step(cfg, tc, state, batch)
+    return jax.jit(step, donate_argnums=0)

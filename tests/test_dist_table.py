@@ -1,0 +1,17 @@
+"""Distributed-table equivalence, in a subprocess with 8 host devices
+(XLA device count is process-global and must stay 1 for the other tests)."""
+import os
+import subprocess
+import sys
+
+
+def test_dist_table_equivalence_8_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.core.dist_check"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (proc.stdout[-3000:], proc.stderr[-3000:])
+    assert "dist table OK" in proc.stdout

@@ -1,0 +1,203 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis vs ref oracles.
+
+Kernels run in interpret mode on CPU (the kernel body executes in Python),
+asserting exact equality with the pure-jnp oracles in kernels/ref.py, and
+end-to-end equivalence of the kernel fast path with the reference table
+transaction.
+"""
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import table as T
+from repro.core.invariants import to_dict
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.apply import grouped_apply
+from repro.kernels.lookup import probe
+
+jax.config.update("jax_platform_name", "cpu")
+
+EMPTY = np.int32(-2147483648)
+
+
+def random_pool(rng, P, B, fill=0.5):
+    """Random pool with unique keys per row, ~fill occupancy."""
+    keys = np.full((P, B), EMPTY, np.int32)
+    vals = np.zeros((P, B), np.int32)
+    for p in range(P):
+        k = rng.choice(np.arange(1, 10_000), size=B, replace=False)
+        occ = rng.random(B) < fill
+        keys[p, occ] = k[occ]
+        vals[p, occ] = rng.integers(0, 1 << 20, size=occ.sum())
+    return jnp.asarray(keys), jnp.asarray(vals)
+
+
+# ---------------------------------------------------------------------------
+# probe kernel
+
+
+@pytest.mark.parametrize("P,B,N,tq,pc", [
+    (8, 4, 16, 8, 8),
+    (64, 8, 100, 16, 32),     # non-divisible N → padding path
+    (130, 8, 257, 64, 64),    # non-divisible P
+    (32, 16, 64, 32, 32),
+    (512, 8, 512, 128, 256),
+])
+def test_probe_matches_ref_sweep(P, B, N, tq, pc):
+    rng = np.random.default_rng(P * 1000 + N)
+    pk, pv = random_pool(rng, P, B)
+    bid = jnp.asarray(rng.integers(0, P, size=N), jnp.int32)
+    # half the queries are present keys, half are misses
+    present = np.asarray(pk)[np.asarray(bid), rng.integers(0, B, size=N)]
+    miss = rng.integers(20_000, 30_000, size=N).astype(np.int32)
+    take = rng.random(N) < 0.5
+    q = jnp.asarray(np.where(take & (present != EMPTY), present, miss))
+    f_ref, v_ref = kref.probe_ref(bid, q, pk, pv)
+    f_k, v_k = probe(bid, q, pk, pv, tq=tq, pc=pc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_ref))
+
+
+def test_probe_extreme_key_values():
+    """int32 extremes must survive the split-16 MXU gather exactly."""
+    pk = jnp.asarray([[2147483647, -2147483647, 1, EMPTY]], jnp.int32)
+    pv = jnp.asarray([[-2147483648 + 1, 2147483647, -7, 0]], jnp.int32)
+    bid = jnp.zeros(4, jnp.int32)
+    q = jnp.asarray([2147483647, -2147483647, 1, 12345], jnp.int32)
+    f, v = probe(bid, q, pk, pv, tq=8, pc=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(f), [True, True, True, False])
+    np.testing.assert_array_equal(np.asarray(v)[:3],
+                                  [-2147483647, 2147483647, -7])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_probe_hypothesis(data):
+    P = data.draw(st.sampled_from([4, 16, 64]))
+    B = data.draw(st.sampled_from([4, 8]))
+    N = data.draw(st.integers(1, 80))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    pk, pv = random_pool(rng, P, B, fill=data.draw(st.floats(0.0, 1.0)))
+    bid = jnp.asarray(rng.integers(0, P, size=N), jnp.int32)
+    q = jnp.asarray(rng.integers(-(1 << 31) + 1, 1 << 31, size=N), jnp.int32)
+    f_ref, v_ref = kref.probe_ref(bid, q, pk, pv)
+    f_k, v_k = probe(bid, q, pk, pv, tq=16, pc=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_ref))
+
+
+# ---------------------------------------------------------------------------
+# combining-apply kernel
+
+
+def sort_ops(kinds, keys, values, bids, P):
+    """Pre-sort by (bucket, lane) as the kernel contract requires."""
+    order = np.argsort(np.where(kinds != 0, bids, P + 1), kind="stable")
+    return (jnp.asarray(kinds[order]), jnp.asarray(keys[order]),
+            jnp.asarray(values[order]), jnp.asarray(bids[order]), order)
+
+
+@pytest.mark.parametrize("P,B,M,pc", [
+    (8, 4, 8, 4),
+    (64, 8, 32, 16),
+    (100, 8, 16, 64),   # non-divisible P
+    (32, 16, 48, 32),
+])
+def test_apply_matches_ref_sweep(P, B, M, pc):
+    rng = np.random.default_rng(P * 31 + M)
+    pk, pv = random_pool(rng, P, B, fill=0.6)
+    kinds = rng.integers(0, 3, size=M).astype(np.int32)
+    bids = rng.integers(0, P, size=M).astype(np.int32)
+    # mix of existing keys and fresh keys
+    ex = np.asarray(pk)[bids, rng.integers(0, B, size=M)]
+    fresh = rng.integers(30_000, 40_000, size=M).astype(np.int32)
+    keys = np.where((rng.random(M) < 0.5) & (ex != EMPTY), ex, fresh)
+    values = rng.integers(0, 1 << 15, size=M).astype(np.int32)
+
+    ks, keq, vs, bs, order = sort_ops(kinds, keys, values, bids, P)
+    pk1, pv1, st1 = kref.apply_ref(ks, keq, vs, bs, pk, pv)
+    pk2, pv2, st2 = grouped_apply(ks, keq, vs, bs, pk, pv, pc=pc,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(pk2), np.asarray(pk1))
+    np.testing.assert_array_equal(np.asarray(pv2), np.asarray(pv1))
+    np.testing.assert_array_equal(np.asarray(st2), np.asarray(st1))
+
+
+def test_apply_full_bucket_reports_st_full():
+    B = 4
+    pk = jnp.asarray([[1, 2, 3, 4]], jnp.int32)     # full bucket
+    pv = jnp.zeros((1, B), jnp.int32)
+    kinds = jnp.asarray([1, 2], jnp.int32)          # insert 9 / delete 1
+    keys = jnp.asarray([9, 1], jnp.int32)
+    vals = jnp.asarray([5, 0], jnp.int32)
+    bids = jnp.zeros(2, jnp.int32)
+    pk2, pv2, status = grouped_apply(kinds, keys, vals, bids, pk, pv, pc=4,
+                                     interpret=True)
+    # full test comes first: BOTH ops blocked (not even Delete runs)
+    np.testing.assert_array_equal(np.asarray(status), [kref.ST_FULL] * 2)
+    np.testing.assert_array_equal(np.asarray(pk2), np.asarray(pk))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_apply_hypothesis(data):
+    P = data.draw(st.sampled_from([4, 16, 64]))
+    B = data.draw(st.sampled_from([2, 8]))
+    M = data.draw(st.integers(1, 40))
+    pc = data.draw(st.sampled_from([4, 16]))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    pk, pv = random_pool(rng, P, B, fill=data.draw(st.floats(0.0, 1.0)))
+    kinds = rng.integers(0, 3, size=M).astype(np.int32)
+    bids = rng.integers(0, P, size=M).astype(np.int32)
+    keys = rng.integers(1, 50, size=M).astype(np.int32)
+    values = rng.integers(0, 99, size=M).astype(np.int32)
+    ks, keq, vs, bs, _ = sort_ops(kinds, keys, values, bids, P)
+    pk1, pv1, st1 = kref.apply_ref(ks, keq, vs, bs, pk, pv)
+    pk2, pv2, st2 = grouped_apply(ks, keq, vs, bs, pk, pv, pc=pc,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(pk2), np.asarray(pk1))
+    np.testing.assert_array_equal(np.asarray(pv2), np.asarray(pv1))
+    np.testing.assert_array_equal(np.asarray(st2), np.asarray(st1))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: kernel fast path == reference transaction
+
+
+@lru_cache(maxsize=None)
+def table_fns(cfg):
+    return {
+        "apply_ref": jax.jit(partial(T.apply_batch, cfg)),
+        "apply_kernel": partial(kops.apply_batch_kernel, cfg, interpret=True),
+        "lookup_kernel": partial(kops.kernel_lookup, cfg, interpret=True),
+    }
+
+
+def test_kernel_fastpath_equals_reference_transaction():
+    cfg = T.TableConfig(dmax=6, bucket_size=4, pool_size=64, n_lanes=8)
+    fns = table_fns(cfg)
+    rng = np.random.default_rng(7)
+    s_ref = T.init_table(cfg)
+    s_ker = T.init_table(cfg)
+    for step in range(30):
+        kinds = rng.integers(0, 3, size=8).astype(np.int32)
+        keys = rng.integers(1, 200, size=8).astype(np.int32)
+        vals = rng.integers(0, 99, size=8).astype(np.int32)
+        ops = T.make_ops(cfg, s_ref, kinds, keys, vals)
+        s_ref, r_ref = fns["apply_ref"](s_ref, ops)
+        s_ker, r_ker = fns["apply_kernel"](s_ker, ops)
+        np.testing.assert_array_equal(np.asarray(r_ker.status),
+                                      np.asarray(r_ref.status),
+                                      err_msg=f"step {step}")
+        assert to_dict(cfg, s_ker) == to_dict(cfg, s_ref), f"step {step}"
+    # kernel lookups agree with reference lookups on the final state
+    q = jnp.asarray(rng.integers(1, 200, size=64), jnp.int32)
+    f1, v1 = T.lookup(cfg, s_ref, q)
+    f2, v2 = fns["lookup_kernel"](s_ker, q)
+    np.testing.assert_array_equal(np.asarray(f2), np.asarray(f1))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
