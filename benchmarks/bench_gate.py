@@ -1,0 +1,141 @@
+"""Benchmark regression gate: run the fast-mode suite, record, compare.
+
+Runs the selected paper-figure tables (one subprocess per table, like
+benchmarks/run.py, to sidestep XLA's CPU dylib symbol exhaustion), writes
+``BENCH_table.json`` mapping row name → {us_per_call, mops}, and fails
+(exit 1) when any throughput row regresses more than ``--threshold``
+(default 20%) against the committed baseline.
+
+Shared machines are noisy; each table runs ``--repeats`` times and every
+row keeps its best Mops (min us), so only persistent regressions trip the
+gate.
+
+Usage:
+  python -m benchmarks.bench_gate                    # gate vs baseline
+  python -m benchmarks.bench_gate --update-baseline  # rewrite the baseline
+  python -m benchmarks.bench_gate --tables fig7_8,fig9 --threshold 0.35
+
+The baseline lives at benchmarks/BENCH_table.json (committed); ``--out``
+writes the fresh measurement (default: the baseline path when updating,
+BENCH_table.json in the CWD otherwise) so CI can upload it as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_table.json")
+
+
+def run_table(name: str) -> dict[str, dict]:
+    """Run one figure table in a subprocess; parse the CSV rows."""
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), env.get("PYTHONPATH")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", name],
+        capture_output=True, text=True, timeout=2400, env=env, cwd=root)
+    rows: dict[str, dict] = {}
+    for line in proc.stdout.splitlines():
+        if not line or line.startswith("name,") or "ERROR" in line:
+            continue
+        parts = line.split(",")
+        if len(parts) != 3:
+            continue
+        rname, us, derived = parts
+        rec = {"us_per_call": float(us)}
+        if derived.endswith("Mops"):
+            rec["mops"] = float(derived[:-4])
+        rows[rname] = rec
+    if proc.returncode != 0 and not rows:
+        raise RuntimeError(
+            f"table {name} failed: {proc.stderr[-500:] or proc.stdout[-500:]}")
+    return rows
+
+
+def run_table_best(name: str, repeats: int) -> dict[str, dict]:
+    """Best-of-``repeats`` per row (max Mops / min us): noise suppression."""
+    best: dict[str, dict] = {}
+    for _ in range(max(1, repeats)):
+        for rname, rec in run_table(name).items():
+            cur = best.get(rname)
+            if cur is None or rec.get("mops", 0.0) > cur.get("mops", 0.0) \
+                    or ("mops" not in rec
+                        and rec["us_per_call"] < cur["us_per_call"]):
+                best[rname] = rec
+    return best
+
+
+def gate(current: dict, baseline: dict, threshold: float) -> list[str]:
+    """Regressions: throughput rows whose Mops dropped > threshold."""
+    bad = []
+    for name, rec in sorted(current.items()):
+        base = baseline.get(name)
+        if not base or "mops" not in rec or "mops" not in base:
+            continue
+        if base["mops"] <= 0:
+            continue
+        drop = 1.0 - rec["mops"] / base["mops"]
+        if drop > threshold:
+            bad.append(f"{name}: {base['mops']:.3f} → {rec['mops']:.3f} Mops "
+                       f"({drop:+.0%} vs {threshold:.0%} budget)")
+    return bad
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", default="fig7_8",
+                    help="comma-separated benchmarks.run table names")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max tolerated relative Mops drop")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--update-baseline", action="store_true")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="runs per table; each row keeps its best")
+    args = ap.parse_args()
+
+    current: dict[str, dict] = {}
+    for name in args.tables.split(","):
+        name = name.strip()
+        print(f"[bench_gate] running {name} (best of {args.repeats}) ...",
+              flush=True)
+        current.update(run_table_best(name, args.repeats))
+    if not current:
+        print("[bench_gate] no rows measured", file=sys.stderr)
+        return 1
+
+    out = args.out or (args.baseline if args.update_baseline
+                       else "BENCH_table.json")
+    with open(out, "w") as f:
+        json.dump({"tables": sorted(args.tables.split(",")),
+                   "rows": current}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[bench_gate] wrote {len(current)} rows to {out}")
+
+    if args.update_baseline:
+        print(f"[bench_gate] baseline updated: {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"[bench_gate] no baseline at {args.baseline}; "
+              "run --update-baseline first", file=sys.stderr)
+        return 1
+    with open(args.baseline) as f:
+        baseline = json.load(f)["rows"]
+    bad = gate(current, baseline, args.threshold)
+    for line in bad:
+        print(f"[bench_gate] REGRESSION {line}", file=sys.stderr)
+    if not bad:
+        n = sum(1 for r in current.values() if "mops" in r)
+        print(f"[bench_gate] OK: {n} throughput rows within "
+              f"{args.threshold:.0%} of baseline")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

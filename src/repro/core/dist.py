@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import table as T
 from repro.core.hashing import HASH_FNS
 
@@ -96,7 +97,7 @@ def dist_apply_batch(cfg: DistConfig, mesh, state, ops: T.OpBatch):
         return state_out, T.BatchResult(status=status_loc.astype(jnp.int8),
                                         error=err)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(cfg.model_axis), state),
                   T.OpBatch(P(cfg.data_axis), P(cfg.data_axis),
@@ -128,7 +129,7 @@ def dist_lookup(cfg: DistConfig, mesh, state, queries):
         v_loc = jax.lax.dynamic_slice(v, (i * n_loc,), (n_loc,))
         return f_loc > 0, jnp.where(f_loc > 0, v_loc, -1)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(cfg.model_axis), state),
                   P(cfg.data_axis)),

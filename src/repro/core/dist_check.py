@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import dist as D
 from repro.core import table as T
 from repro.core.invariants import to_dict
@@ -33,7 +34,7 @@ def main():
     ref_state = T.init_table(ref_cfg)
 
     rng = np.random.default_rng(0)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for step in range(12):
             kinds = rng.integers(1, 3, size=n_glob).astype(np.int32)
             # distinct keys per batch: shard-local linearization order can
@@ -94,7 +95,7 @@ def check_compression(mesh):
         return red, red2, fb
 
     fb0 = init_feedback({"w": base})
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(), fb0),),
         out_specs=(jax.tree.map(lambda _: P(), {"w": base}),

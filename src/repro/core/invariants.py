@@ -83,7 +83,16 @@ def check_invariants(cfg: TableConfig, state: TableState,
     # 4. buckets depths never exceed the directory capacity
     assert (bdepth[live] <= cfg.dmax).all()
 
-    # 5. allocator consistency: live ∩ free = ∅, live ∪ free ⊆ [0, nalloc)
+    # 5. incremental occupancy counts match a recount on every live bucket
+    # (and the trash row stays 0) — TableState.counts is maintained by
+    # insert/delete/split/merge, never recomputed on the hot path
+    counts = np.asarray(state.counts)
+    occ_re = (keys != _EMPTY).sum(axis=-1)
+    assert (counts[live] == occ_re[live]).all(), \
+        "incremental counts out of sync with pool occupancy"
+    assert counts[P] == 0, "trash-row count nonzero"
+
+    # 6. allocator consistency: live ∩ free = ∅, live ∪ free ⊆ [0, nalloc)
     free = np.asarray(state.free_stack)[: int(state.free_top)]
     live_ids = np.nonzero(live[:P])[0]
     assert not set(free) & set(live_ids), "freed bucket still live"

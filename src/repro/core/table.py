@@ -9,6 +9,10 @@ full mapping table; the essential preserved properties are
 
   rule (A)  lookups are pure gathers on an immutable snapshot — zero sync;
   rule (B)  ops on distinct buckets never interact (grouped combining);
+  rule (C)  the common (no-resize) case is a SINGLE fused pass: segmented
+               scans pre-assign slots for the whole announced batch and one
+               scatter installs it (DESIGN.md §3) — the serial wave loop
+               only runs as a fallback for bucket groups that overflow;
   wait-freedom  every op completes within statically bounded control flow
                (``max_rounds`` combining rounds; no unbounded retries);
   exactly-once  per-lane sequence numbers gate application, as in the
@@ -61,6 +65,8 @@ class TableConfig:
                             # the shard id consumed them — core/dist.py)
     initial_depth: int = 0  # start with 2**initial_depth buckets
     max_rounds: int = 0     # 0 → dmax + 2 (structural wait-freedom bound)
+    use_fast_path: bool = True  # single-pass combining (rule C); False pins
+                                # the serial wave loop (equivalence oracle)
 
     def __post_init__(self):
         assert 1 <= self.dmax <= 20
@@ -104,6 +110,9 @@ class TableState(NamedTuple):
     applied_seq: jnp.ndarray # i32[n]      paper: results[i].seqnum
     last_status: jnp.ndarray # i8[n]       paper: results[i].status
     error: jnp.ndarray       # bool[]      capacity/depth exhaustion flag
+    counts: jnp.ndarray      # i32[P+1]    incremental per-bucket occupancy
+                             #             (insert/delete/split/merge keep it
+                             #             in sync; row P stays 0)
 
 
 class OpBatch(NamedTuple):
@@ -145,6 +154,7 @@ def init_table(cfg: TableConfig) -> TableState:
         applied_seq=jnp.zeros(n, jnp.int32),
         last_status=jnp.zeros(n, jnp.int8),
         error=jnp.asarray(False),
+        counts=jnp.zeros(P + 1, jnp.int32),
     )
 
 
@@ -178,10 +188,6 @@ def _route(cfg: TableConfig, state_directory, keys):
     return h, state_directory[dir_index(h, cfg.dmax)]
 
 
-def _bucket_counts(keys):
-    return (keys != EMPTY_KEY).sum(axis=-1).astype(jnp.int32)
-
-
 def _wave_ranks(cfg: TableConfig, bucket: jnp.ndarray, pending: jnp.ndarray):
     """Rank of each pending op within its destination-bucket group.
 
@@ -201,6 +207,226 @@ def _wave_ranks(cfg: TableConfig, bucket: jnp.ndarray, pending: jnp.ndarray):
     return jnp.where(pending, rank, jnp.int32(-1))
 
 
+def _seg_base(start: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast ``values`` at segment starts over their segment.
+
+    start bool[n] marks segment heads in a sorted array; returns, for every
+    position, the value at the head of its segment (gather through a cummax
+    of head indices — segments are contiguous by construction)."""
+    n = start.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    head = jax.lax.cummax(jnp.where(start, iota, -1))
+    return values[head]
+
+
+# Up to this lane count the segmented quantities are computed by O(n²)
+# masked reductions (a handful of fused [n, n] vector ops — much cheaper
+# than sorting for the narrow batches combining uses, on CPU and TPU both);
+# wider batches switch to the O(n log n) sort-based scans.
+_PAIRWISE_MAX_LANES = 256
+
+
+def _links_pairwise(cfg, ops, active, b_act, exist0, delta_of):
+    """(present, delta, occ_excl, blocked_from, last_applied_of, rank_of)
+    via masked [n, n] reductions (contract shared with _links_sorted).
+
+    Row i of the masks ranges over candidate predecessors/successors j;
+    `before` realizes the lane linearization order, `same_b`/`same_bk`
+    the bucket / (bucket, key) segmentation. occ_excl is the segmented
+    exclusive prefix sum of slot deltas; blocked_from(viol) spreads a
+    violation over its bucket group's lane-suffix; last_applied_of(applied)
+    marks each (bucket, key) run's final applied op; rank_of ranks an
+    arbitrary lane subset within its bucket group. Everything here is
+    elementwise + small reductions — it fuses into a handful of kernels,
+    unlike the pool-wide scatter/gather round-trips it replaces.
+    """
+    n = cfg.n_lanes
+    lane = jnp.arange(n, dtype=jnp.int32)
+    li, lj = lane[:, None], lane[None, :]
+    before = lj < li
+    same_b = (active[:, None] & active[None, :]
+              & (b_act[:, None] == b_act[None, :]))
+    same_bk = same_b & (ops.key[:, None] == ops.key[None, :])
+
+    prev = jnp.max(jnp.where(same_bk & before, lj, -1), axis=1)
+    present = jnp.where(prev >= 0, ops.kind[jnp.maximum(prev, 0)] == INS,
+                        exist0)
+    delta = delta_of(present)
+    occ_excl = jnp.where(same_b & before, delta[None, :], 0).sum(axis=1)
+
+    def blocked_from(viol):
+        # the first violating op of a bucket blocks itself and every later
+        # op of the group (a full bucket admits no update — the suffix rule)
+        return (same_b & (lj <= li) & viol[None, :]).any(axis=1)
+
+    def last_applied_of(applied):
+        return applied & ~(same_bk & (lj > li) & applied[None, :]).any(axis=1)
+
+    def rank_of(flag):
+        return jnp.where(same_b & before & flag[None, :], 1, 0).sum(axis=1)
+
+    return present, delta, occ_excl, blocked_from, last_applied_of, rank_of
+
+
+def _links_sorted(cfg, ops, active, b_act, exist0, delta_of):
+    """Same contract as :func:`_links_pairwise` via sorted segmented scans:
+    one lex sort by (bucket, key, lane) drives the presence chains, one by
+    (bucket, lane) the occupancy prefix sums, group broadcasts and ranks."""
+    n = cfg.n_lanes
+    lane = jnp.arange(n, dtype=jnp.int32)
+    bs, ks, ls = jax.lax.sort((b_act, ops.key, lane), num_keys=3)
+    same_run = jnp.concatenate(
+        [jnp.zeros(1, bool), (bs[1:] == bs[:-1]) & (ks[1:] == ks[:-1])])
+    prev_ins = jnp.concatenate([jnp.zeros(1, bool), ops.kind[ls][:-1] == INS])
+    present = jnp.zeros(n, bool).at[ls].set(
+        jnp.where(same_run, prev_ins, exist0[ls]))
+    delta = delta_of(present)
+
+    bs2, ls2 = jax.lax.sort((b_act, lane), num_keys=2)
+    seg2 = jnp.concatenate([jnp.ones(1, bool), bs2[1:] != bs2[:-1]])
+
+    def seg_excl(x_sorted):
+        pre = jnp.cumsum(x_sorted) - x_sorted
+        return pre - _seg_base(seg2, pre)
+
+    occ_excl = jnp.zeros(n, jnp.int32).at[ls2].set(seg_excl(delta[ls2]))
+
+    def blocked_from(viol):
+        # inclusive segmented OR along (bucket, lane): any violation at or
+        # before me in my bucket blocks me (the suffix rule)
+        v = viol[ls2].astype(jnp.int32)
+        incl = seg_excl(v) + v
+        return jnp.zeros(n, bool).at[ls2].set(incl > 0)
+
+    def last_applied_of(applied):
+        # applied is a lane-prefix of every bucket group, hence of every
+        # (bucket, key) run: last-applied = applied with no applied
+        # successor in the run (the run's next op, if any, sits at i+1)
+        ap = applied[ls]
+        nxt = jnp.concatenate([same_run[1:] & ap[1:], jnp.zeros(1, bool)])
+        return jnp.zeros(n, bool).at[ls].set(ap & ~nxt)
+
+    def rank_of(flag):
+        return jnp.zeros(n, jnp.int32).at[ls2].set(
+            seg_excl(flag[ls2].astype(jnp.int32)))
+
+    return present, delta, occ_excl, blocked_from, last_applied_of, rank_of
+
+
+def _fast_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
+    """Single-pass combining: segmented slot assignment + one scatter (rule C).
+
+    The whole announced batch is linearized as (bucket, lane) — the same
+    order the wave loop replays serially — but applied at once:
+
+      * presence chains: segmenting by (bucket, key) makes every op's
+        "does my key exist at my turn" a 1-step recurrence (the first op of
+        a run reads the snapshot; later ops read the previous op's kind),
+        which resolves intra-batch duplicate keys;
+      * occupancy prefix: a segmented exclusive prefix sum of the ±1 slot
+        deltas over (bucket, lane) order yields each op's occupancy-at-turn;
+        the first op that would find its bucket full (the paper's FAIL)
+        blocks — together with the rest of its group's lane-suffix, since
+        nothing leaves a full bucket — and stays pending for the split
+        pass; the non-blocking prefix still applies, so pending ops always
+        sit on exactly-full buckets;
+      * slot assignment: applied ops commit with one concatenated scatter
+        (slot_eq writes: delete-clears + in-place updates, plus fresh
+        inserts ranked into the bucket's free ∪ freed slots).
+
+    DESIGN.md §3 gives the linearization argument; the self-consistency of
+    the no-blocking occupancy check is the key step. Frozen buckets complete
+    here too (status FROZEN, no writes), as in the wave loop.
+    """
+    P, B, n = cfg.pool_size, cfg.bucket_size, cfg.n_lanes
+    _, bucket = _route(cfg, st.directory, ops.key)
+    bucket = jnp.where(pending, bucket, jnp.int32(P))
+
+    frozen_hit = pending & st.frozen[bucket]
+    active = pending & ~frozen_hit
+    b_act = jnp.where(active, bucket, jnp.int32(P))
+    is_ins = active & (ops.kind == INS)
+    is_del = active & (ops.kind == DEL)
+
+    rows_k = st.keys[b_act]                        # [n, B] snapshot rows
+    eq0 = rows_k == ops.key[:, None]
+    exist0 = active & eq0.any(axis=-1)
+    slot_eq = jnp.argmax(eq0, axis=-1)
+
+    def delta_of(present):
+        return (is_ins & ~present).astype(jnp.int32) - (is_del & present)
+
+    links = (_links_pairwise if n <= _PAIRWISE_MAX_LANES else _links_sorted)
+    present, delta, occ_excl, blocked_from, last_applied_of, rank_of = links(
+        cfg, ops, active, b_act, exist0, delta_of)
+
+    # paper: the full test comes FIRST — an op at occupancy B fails even if
+    # a later delete would have made room. The first blocked op of a bucket
+    # blocks the rest of its group (nothing leaves a full bucket), so the
+    # applied set is exactly the per-bucket non-blocking lane-prefix; the
+    # blocked suffix stays pending, and its bucket is exactly full after
+    # this pass — the slow path can go straight to the split.
+    viol = active & (st.counts[b_act] + occ_excl >= B)
+    applied = active & ~blocked_from(viol)
+
+    # --- statuses + completion ------------------------------------------
+    op_status = jnp.where(ops.kind == INS, ~present, present).astype(jnp.int8)
+    status = jnp.where(applied, op_status, status)
+    status = jnp.where(frozen_hit, jnp.int8(FROZEN), status)
+    done = applied | frozen_hit
+    applied_seq = jnp.where(done, ops.seq, st.applied_seq)
+    pending = pending & ~done
+
+    # --- scatter install: only the LAST applied op of each (bucket, key)
+    # run writes (earlier ops' effects are subsumed — their statuses and
+    # deltas were already charged above) ----------------------------------
+    last_applied = last_applied_of(applied)
+    del_clear = last_applied & (ops.kind == DEL) & exist0
+    ins_over = last_applied & (ops.kind == INS) & exist0
+    ins_new = last_applied & (ops.kind == INS) & ~exist0
+
+    # fresh inserts: segmented rank within the bucket → r-th free slot of
+    # (initially-empty ∪ delete-cleared); capacity is guaranteed because the
+    # occupancy check bounds final occupancy by B (DESIGN.md §3)
+    rank = rank_of(ins_new)
+    # slots freed by committed deletes of my bucket, as an [n, B] mask
+    if n <= _PAIRWISE_MAX_LANES:
+        # pairwise: is there a deleting op j in my bucket clearing column s?
+        same_grp = (active[:, None] & active[None, :]
+                    & (b_act[:, None] == b_act[None, :]))        # [n, n]
+        col_hit = slot_eq[None, :, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (1, n, B), 2)                             # [1, n, B]
+        freed_rows = ((same_grp & del_clear[None, :])[:, :, None]
+                      & col_hit).any(axis=1)                     # [n, B]
+    else:
+        cleared = jnp.zeros((P + 1, B), bool).at[
+            jnp.where(del_clear, b_act, jnp.int32(P)), slot_eq].set(True)
+        freed_rows = cleared[b_act]
+    free_rows = (rows_k == EMPTY_KEY) | freed_rows
+    csum = jnp.cumsum(free_rows, axis=-1)
+    slot_new = jnp.argmax(free_rows & (csum == (rank + 1)[:, None]), axis=-1)
+
+    # two sequential scatters install everything: slot_eq writers
+    # (delete-clears + in-place updates) first, fresh inserts second.
+    # They must be separate .at[] applications: a fresh insert may claim a
+    # delete-freed slot, and duplicate indices within ONE scatter update in
+    # unspecified order — sequencing makes the insert win by construction.
+    w_eq = del_clear | ins_over
+    r_eq = jnp.where(w_eq, b_act, jnp.int32(P))
+    keys_u = st.keys.at[r_eq, slot_eq].set(
+        jnp.where(ins_over, ops.key, EMPTY_KEY))
+    vals_u = st.vals.at[r_eq, slot_eq].set(jnp.where(ins_over, ops.value, 0))
+    r_new = jnp.where(ins_new, b_act, jnp.int32(P))
+    keys_u = keys_u.at[r_new, slot_new].set(
+        jnp.where(ins_new, ops.key, EMPTY_KEY))
+    vals_u = vals_u.at[r_new, slot_new].set(jnp.where(ins_new, ops.value, 0))
+
+    counts = st.counts.at[b_act].add(jnp.where(applied, delta, 0))
+    st = st._replace(keys=keys_u, vals=vals_u, counts=counts,
+                     applied_seq=applied_seq)
+    return st, pending, status
+
+
 def _wave_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
     """Apply every pending op whose destination allows it (ApplyWFOp).
 
@@ -216,7 +442,7 @@ def _wave_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
     n_waves = rank.max() + 1                   # 0 waves if nothing pending
 
     def body(carry):
-        w, keys, vals, pending, status, applied_seq = carry
+        w, keys, vals, counts, pending, status, applied_seq = carry
         sel = pending & (rank == w)
         row = jnp.where(sel, bucket, jnp.int32(P))       # trash row if idle
         rows_k = keys[row]                               # [n, B]
@@ -245,6 +471,10 @@ def _wave_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
         wrow = jnp.where(do_write, row, jnp.int32(P))
         keys = keys.at[wrow, write_slot].set(jnp.where(do_write, new_key, EMPTY_KEY))
         vals = vals.at[wrow, write_slot].set(jnp.where(do_write, new_val, 0))
+        dcount = (apply_ & is_ins & ~exist).astype(jnp.int32) \
+            - (apply_ & ~is_ins & exist)
+        counts = counts.at[jnp.where(apply_, row, jnp.int32(P))].add(dcount)
+        counts = counts.at[P].set(0)
 
         op_status = jnp.where(is_ins, ~exist, exist).astype(jnp.int8)
         status = jnp.where(apply_, op_status, status)
@@ -252,15 +482,17 @@ def _wave_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
         done = apply_ | frozen_hit
         applied_seq = jnp.where(done, ops.seq, applied_seq)
         pending = pending & ~done
-        return w + 1, keys, vals, pending, status, applied_seq
+        return w + 1, keys, vals, counts, pending, status, applied_seq
 
     def cond(carry):
         return carry[0] < n_waves
 
-    _, keys, vals, pending, status, applied_seq = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), st.keys, st.vals, pending, status, st.applied_seq)
+    _, keys, vals, counts, pending, status, applied_seq = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), st.keys, st.vals, st.counts, pending,
+                     status, st.applied_seq)
     )
-    return st._replace(keys=keys, vals=vals, applied_seq=applied_seq), pending, status
+    return st._replace(keys=keys, vals=vals, counts=counts,
+                       applied_seq=applied_seq), pending, status
 
 
 def _alloc_pairs(cfg: TableConfig, st: TableState, k):
@@ -292,10 +524,9 @@ def _split_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status)
     """
     P, B, n = cfg.pool_size, cfg.bucket_size, cfg.n_lanes
     _, bucket = _route(cfg, st.directory, ops.key)
-    counts = _bucket_counts(st.keys)
 
     needs = jnp.zeros(P + 1, bool).at[jnp.where(pending, bucket, P)].set(True)
-    needs = needs & st.live & ~st.frozen & (counts == B)
+    needs = needs & st.live & ~st.frozen & (st.counts == B)
     needs = needs.at[P].set(False)
     # a bucket already at dmax cannot split: the hash bits are exhausted —
     # same failure mode as the paper running out of key bits.
@@ -339,6 +570,10 @@ def _split_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status)
 
     keys = st.keys.at[id0].set(c0k).at[id1].set(c1k)
     vals = st.vals.at[id0].set(c0v).at[id1].set(c1v)
+    # incremental occupancy: children get their redistribution counts, dead
+    # parents drop to 0 (no O(P·B) recount — the point of TableState.counts)
+    counts = st.counts.at[id0].set(to0.sum(axis=-1).astype(jnp.int32))
+    counts = counts.at[id1].set(to1.sum(axis=-1).astype(jnp.int32))
     bdepth = st.bdepth.at[id0].set(pd + 1).at[id1].set(pd + 1)
     bprefix = st.bprefix.at[id0].set(pp * 2).at[id1].set(pp * 2 + 1)
     live = st.live.at[id0].set(True).at[id1].set(True)
@@ -348,6 +583,7 @@ def _split_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status)
     dead_ids = jnp.where(valid, split_ids, jnp.int32(P))
     live = live.at[dead_ids].set(False)
     live = live.at[P].set(False)
+    counts = counts.at[dead_ids].set(0).at[P].set(0)
     push_pos = jnp.where(valid, st.free_top + jnp.cumsum(valid) - 1, P)
     free_stack = st.free_stack.at[push_pos].set(split_ids)
     free_top = st.free_top + k
@@ -371,7 +607,7 @@ def _split_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status)
     st = st._replace(
         directory=new_dir, depth=depth, keys=keys, vals=vals, bdepth=bdepth,
         bprefix=bprefix, live=live, frozen=frozen, free_stack=free_stack,
-        free_top=free_top,
+        free_top=free_top, counts=counts,
     )
     return st, pending, status
 
@@ -391,23 +627,44 @@ def apply_batch(cfg: TableConfig, state: TableState, ops: OpBatch):
     replay = (ops.kind != NOP) & ~fresh
     status0 = jnp.full(n, PENDING, jnp.int8)
 
+    st, pending, status = state, fresh, status0
+    if cfg.use_fast_path:
+        # rule C: one fused pass applies everything that fits up front —
+        # the common (no-resize) case never enters the round loop below.
+        # Ops it leaves pending sit on exactly-full buckets, so the slow
+        # rounds can split FIRST and skip a whole wave pass per round.
+        st, pending, status = _fast_pass(cfg, st, ops, pending, status)
+
     def round_body(carry):
         r, st, pending, status = carry
-        st, pending, status = _wave_pass(cfg, st, ops, pending, status)
-        st, pending, status = jax.lax.cond(
-            pending.any(),
-            lambda st_, pend_, stat_: _split_pass(cfg, st_, ops, pend_, stat_),
-            lambda st_, pend_, stat_: (st_, pend_, stat_),
-            st, pending, status,
-        )
+        if cfg.use_fast_path:
+            st, pending, status = _split_pass(cfg, st, ops, pending, status)
+            st, pending, status = _wave_pass(cfg, st, ops, pending, status)
+        else:
+            st, pending, status = _wave_pass(cfg, st, ops, pending, status)
+            st, pending, status = jax.lax.cond(
+                pending.any(),
+                lambda st_, p_, s_: _split_pass(cfg, st_, ops, p_, s_),
+                lambda st_, p_, s_: (st_, p_, s_),
+                st, pending, status,
+            )
         return r + 1, st, pending, status
 
     def round_cond(carry):
         r, _, pending, _ = carry
         return (r < cfg.rounds) & pending.any()
 
-    _, st, pending, status = jax.lax.while_loop(
-        round_cond, round_body, (jnp.int32(0), state, fresh, status0)
+    def run_rounds(st, pending, status):
+        # overflow fallback: bounded split/wave rounds (the paper's
+        # FAIL → ResizeWF slow path)
+        _, st, pending, status = jax.lax.while_loop(
+            round_cond, round_body, (jnp.int32(0), st, pending, status))
+        return st, pending, status
+
+    st, pending, status = jax.lax.cond(
+        pending.any(), run_rounds,
+        lambda st_, pend_, stat_: (st_, pend_, stat_),
+        st, pending, status,
     )
     # wait-freedom: pending must be empty within the static round bound —
     # anything left means capacity exhaustion, flagged, never spun on.
@@ -442,8 +699,8 @@ def delete_batch(cfg: TableConfig, state: TableState, keys):
 
 
 def table_size(state: TableState) -> jnp.ndarray:
-    occ = (state.keys != EMPTY_KEY).sum(axis=-1)
-    return jnp.where(state.live, occ, 0).sum()
+    # O(P) read of the incremental occupancy counts — no pool-wide recount
+    return jnp.where(state.live, state.counts, 0).sum()
 
 
 # ---------------------------------------------------------------------------
@@ -460,7 +717,7 @@ def freeze_buddies(cfg: TableConfig, state: TableState, parent_prefix, parent_de
     e1 = (parent_prefix * 2 + 1) << h_shift
     b0 = state.directory[e0]
     b1 = state.directory[e1]
-    counts = _bucket_counts(state.keys)
+    counts = state.counts
     ok = (
         (b0 != b1)
         & (state.bdepth[b0] == d1) & (state.bdepth[b1] == d1)
@@ -512,12 +769,16 @@ def merge_buddies(cfg: TableConfig, state: TableState, parent_prefix, parent_dep
 
     keys = state.keys.at[new_id].set(jnp.where(ok, mk, state.keys[new_id]))
     vals = state.vals.at[new_id].set(jnp.where(ok, mv, state.vals[new_id]))
+    counts_m = state.counts.at[new_id].set(
+        jnp.where(ok, state.counts[b0] + state.counts[b1],
+                  state.counts[new_id]))
     bdepth = state.bdepth.at[new_id].set(jnp.where(ok, parent_depth, state.bdepth[new_id]))
     bprefix = state.bprefix.at[new_id].set(jnp.where(ok, parent_prefix, state.bprefix[new_id]))
     live = state.live.at[new_id].set(True)
     dead0 = jnp.where(ok, b0, jnp.int32(P))
     dead1 = jnp.where(ok, b1, jnp.int32(P))
     live = live.at[dead0].set(False).at[dead1].set(False).at[P].set(False)
+    counts_m = counts_m.at[dead0].set(0).at[dead1].set(0).at[P].set(0)
     # unfreeze (merged children die frozen; parent starts unfrozen)
     frozen = state.frozen.at[dead0].set(False).at[dead1].set(False)
     frozen = frozen.at[new_id].set(False).at[P].set(False)
@@ -538,18 +799,48 @@ def merge_buddies(cfg: TableConfig, state: TableState, parent_prefix, parent_dep
         directory=directory, depth=depth, keys=keys, vals=vals, bdepth=bdepth,
         bprefix=bprefix, live=live, frozen=frozen, nalloc=nalloc,
         free_stack=free_stack, free_top=free_top, error=error,
+        counts=counts_m,
     )
     return st, ok
 
 
-def build_table_fns(cfg: TableConfig):
-    """Jitted closures over a static config (the public fast-path API)."""
+def build_table_fns(cfg: TableConfig, *, use_kernels: bool | None = None,
+                    interpret: bool | None = None):
+    """Jitted closures over a static config (the public fast-path API).
+
+    ``use_kernels=None`` is backend-aware: on TPU the Pallas fused
+    route+probe lookup and grouped-combining apply kernels are the default
+    hot path; elsewhere the XLA single-pass transaction is (Pallas interpret
+    mode is a correctness device, not a fast path). Forcing
+    ``use_kernels=True`` off-TPU selects interpret mode automatically.
+    """
+    from repro.kernels import ops as kops  # deferred: kernels import table
+
+    if use_kernels is None:
+        use_kernels = kops.kernels_are_default()
+    if use_kernels:
+        lookup_fn = partial(kops.kernel_lookup, cfg, interpret=interpret)
+        apply_fn = partial(kops.apply_batch_kernel, cfg, interpret=interpret)
+
+        def ins(state, keys, values):
+            return apply_fn(state, make_ops(
+                cfg, state, jnp.full((cfg.n_lanes,), INS, jnp.int32), keys,
+                values))
+
+        def dele(state, keys):
+            return apply_fn(state, make_ops(
+                cfg, state, jnp.full((cfg.n_lanes,), DEL, jnp.int32), keys))
+    else:
+        lookup_fn = jax.jit(partial(lookup, cfg))
+        apply_fn = jax.jit(partial(apply_batch, cfg), donate_argnums=0)
+        ins = jax.jit(partial(insert_batch, cfg), donate_argnums=0)
+        dele = jax.jit(partial(delete_batch, cfg), donate_argnums=0)
     return {
         "init": partial(init_table, cfg),
-        "lookup": jax.jit(partial(lookup, cfg)),
-        "apply_batch": jax.jit(partial(apply_batch, cfg), donate_argnums=0),
-        "insert_batch": jax.jit(partial(insert_batch, cfg), donate_argnums=0),
-        "delete_batch": jax.jit(partial(delete_batch, cfg), donate_argnums=0),
+        "lookup": lookup_fn,
+        "apply_batch": apply_fn,
+        "insert_batch": ins,
+        "delete_batch": dele,
         "merge_buddies": jax.jit(partial(merge_buddies, cfg), donate_argnums=0),
         "size": jax.jit(table_size),
     }

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 class FeedbackState(NamedTuple):
     residual: Any   # pytree like grads (fp32)
@@ -74,7 +76,7 @@ def make_compressed_allreduce(mesh, grads_struct, axes=("data",)):
     def body(grads, fb):
         return compressed_psum_grads(grads, fb, axes, world)
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(compat.shard_map(
         body, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(), grads_struct),
                   FeedbackState(residual=jax.tree.map(lambda _: P(),

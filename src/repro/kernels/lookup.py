@@ -16,6 +16,15 @@ VMEM budget per program (defaults TQ=256, PC=512, B=8, int32):
   one-hot  256·512·4      = 512 KiB   (fp32 operand for the MXU)
   out      256·(1+1)·4    =   2 KiB
 → ~0.6 MiB of 16 MiB VMEM; MXU tiles are (128,128)-aligned by construction.
+
+`fused_probe` additionally fuses hash → directory-route into the kernel:
+the whole directory (i32[2**dmax]) travels into VMEM as a broadcast block
+and the route is the same one-hot MXU idiom, chunked DC entries at a time
+(a static in-kernel loop — bucket ids never materialize in HBM). Extra VMEM
+at dmax=13, DC=512: directory 32 KiB + route one-hot 512 KiB, still < 2 MiB
+total. Directory values must stay below 2**24 (exact fp32 integers); the
+wrapper asserts this. For dmax > FUSED_DMAX_LIMIT callers should fall back
+to the unfused probe (kernels/ops.py does).
 """
 from __future__ import annotations
 
@@ -24,31 +33,27 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.hashing import HASH_FNS
 from repro.kernels.ref import EMPTY_KEY  # noqa: F401 (API re-export)
 
 _EMPTY = -2147483648  # python int: kernels must not close over traced constants
 
 
-def _probe_kernel(q_ref, b_ref, pk_ref, pv_ref, found_ref, val_ref, *, pc: int):
-    j = pl.program_id(1)
+def _probe_tile(q, b, pk_ref, pv_ref, found_ref, val_ref, j, pc: int):
+    """Shared probe body: accumulate one pool chunk's hits for a query tile.
 
-    @pl.when(j == 0)
-    def _init():
-        found_ref[...] = jnp.zeros_like(found_ref)
-        val_ref[...] = jnp.zeros_like(val_ref)
-
-    q = q_ref[...]                      # [TQ]
-    b = b_ref[...]                      # [TQ] global bucket ids
+    One-hot gather via the MXU: [TQ, PC] @ [PC, B] → [TQ, B]. fp32 matmuls
+    are exact only up to 2**24, so 32-bit payloads are split into 16-bit
+    halves (two exact fp32 contractions) and recombined. Used by both the
+    unfused (`_probe_kernel`) and fused (`_fused_probe_kernel`) lookups —
+    keep them in lockstep by construction."""
     keys = pk_ref[...]                  # [PC, B]
     vals = pv_ref[...]                  # [PC, B]
-
     local = b - j * pc
     in_chunk = (local >= 0) & (local < pc)
     tq = q.shape[0]
-    # one-hot gather via the MXU: [TQ, PC] @ [PC, B] → [TQ, B].
-    # fp32 matmuls are exact only up to 2**24, so 32-bit payloads are split
-    # into 16-bit halves (two exact fp32 contractions) and recombined.
     iota = jax.lax.broadcasted_iota(jnp.int32, (tq, pc), 1)
     onehot = ((iota == local[:, None]) & in_chunk[:, None]).astype(jnp.float32)
 
@@ -65,12 +70,23 @@ def _probe_kernel(q_ref, b_ref, pk_ref, pv_ref, found_ref, val_ref, *, pc: int):
 
     rows_k = gather32(keys)
     rows_v = gather32(vals)
-
     eq = in_chunk[:, None] & (rows_k == q[:, None]) & (q[:, None] != _EMPTY)
     hit = eq.any(axis=-1)
     val = jnp.sum(jnp.where(eq, rows_v, 0), axis=-1)
     found_ref[...] += hit.astype(jnp.int32)
     val_ref[...] += val
+
+
+def _probe_kernel(q_ref, b_ref, pk_ref, pv_ref, found_ref, val_ref, *, pc: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        found_ref[...] = jnp.zeros_like(found_ref)
+        val_ref[...] = jnp.zeros_like(val_ref)
+
+    _probe_tile(q_ref[...], b_ref[...], pk_ref, pv_ref, found_ref, val_ref,
+                j, pc)
 
 
 @functools.partial(jax.jit, static_argnames=("tq", "pc", "interpret"))
@@ -111,5 +127,112 @@ def probe(bucket_ids: jnp.ndarray, queries: jnp.ndarray, pool_keys: jnp.ndarray,
         ],
         interpret=interpret,
     )(q, bid, pk, pv)
+    found = found[:n] > 0
+    return found, jnp.where(found, val[:n], -1)
+
+
+# ---------------------------------------------------------------------------
+# fused hash → directory-route → probe
+
+
+# beyond this directory depth the directory block outgrows a comfortable
+# VMEM slice (2**17 entries = 512 KiB) and callers should route in HBM
+FUSED_DMAX_LIMIT = 17
+
+
+def _hash_in_kernel(q, hash_name: str, hash_shift: int):
+    """cfg.hash_fn inside the kernel: HASH_FNS are pure jnp ops over python
+    constants, so the canonical implementations trace fine in a kernel body
+    (hash_name/hash_shift arrive as static args)."""
+    h = HASH_FNS[hash_name](q)
+    if hash_shift:
+        h = h << hash_shift
+    return h
+
+
+def _fused_probe_kernel(q_ref, dir_ref, pk_ref, pv_ref, found_ref, val_ref,
+                        bid_ref, *, pc: int, dc: int, dcap: int, dmax: int,
+                        hash_name: str, hash_shift: int):
+    j = pl.program_id(1)
+    q = q_ref[...]                      # [TQ]
+    tq = q.shape[0]
+
+    # --- route: top-dmax hash bits → directory entry → bucket id ---------
+    # Depends only on the query tile, so it runs once per tile (the pool
+    # grid dim j is innermost — the bid scratch persists across j) and the
+    # remaining pool chunks reuse the stashed ids. The gather is the same
+    # one-hot MXU contraction as the probe, chunked DC directory entries at
+    # a time (static unrolled loop). Directory values < 2**24 are exact in
+    # fp32, so a single contraction suffices.
+    @pl.when(j == 0)
+    def _route():
+        found_ref[...] = jnp.zeros_like(found_ref)
+        val_ref[...] = jnp.zeros_like(val_ref)
+        h = _hash_in_kernel(q, hash_name, hash_shift)
+        e = (h >> jnp.uint32(32 - dmax)).astype(jnp.int32)
+        b = jnp.zeros((tq,), jnp.float32)
+        for c in range(dcap // dc):
+            local = e - c * dc
+            hit = (local >= 0) & (local < dc)
+            iota = jax.lax.broadcasted_iota(jnp.int32, (tq, dc), 1)
+            onehot = ((iota == local[:, None])
+                      & hit[:, None]).astype(jnp.float32)
+            dchunk = dir_ref[c * dc:(c + 1) * dc].astype(jnp.float32)
+            b += jax.lax.dot_general(onehot, dchunk[:, None],
+                                     (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)[:, 0]
+        bid_ref[...] = b.astype(jnp.int32)
+
+    # --- probe: shared tile body, bucket ids from the scratch stash ------
+    _probe_tile(q, bid_ref[...], pk_ref, pv_ref, found_ref, val_ref, j, pc)
+
+
+@functools.partial(jax.jit, static_argnames=("dmax", "hash_name", "hash_shift",
+                                             "tq", "pc", "dc", "interpret"))
+def fused_probe(directory: jnp.ndarray, queries: jnp.ndarray,
+                pool_keys: jnp.ndarray, pool_vals: jnp.ndarray, *, dmax: int,
+                hash_name: str = "fmix32", hash_shift: int = 0, tq: int = 256,
+                pc: int = 512, dc: int = 512, interpret: bool = True):
+    """Single-kernel lookup: hash, directory route, and bucket probe fused.
+
+    directory i32[2**dmax] travels whole into VMEM; bucket ids never touch
+    HBM. Returns (found bool[N], vals i32[N] with -1 for misses).
+    """
+    n = queries.shape[0]
+    p, b = pool_keys.shape
+    dcap = directory.shape[0]
+    assert dcap == 1 << dmax and dmax <= FUSED_DMAX_LIMIT
+    assert p < (1 << 24), "bucket ids must be exact in fp32"
+    dc = min(dc, dcap)
+    assert dcap % dc == 0
+    n_pad = -n % tq
+    p_pad = -p % pc
+    q = jnp.pad(queries, (0, n_pad), constant_values=EMPTY_KEY)
+    pk = jnp.pad(pool_keys, ((0, p_pad), (0, 0)), constant_values=EMPTY_KEY)
+    pv = jnp.pad(pool_vals, ((0, p_pad), (0, 0)))
+    grid = ((n + n_pad) // tq, (p + p_pad) // pc)
+
+    found, val = pl.pallas_call(
+        functools.partial(_fused_probe_kernel, pc=pc, dc=dc, dcap=dcap,
+                          dmax=dmax, hash_name=hash_name,
+                          hash_shift=hash_shift),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),          # queries
+            pl.BlockSpec((dcap,), lambda i, j: (0,)),        # whole directory
+            pl.BlockSpec((pc, b), lambda i, j: (j, 0)),      # pool keys chunk
+            pl.BlockSpec((pc, b), lambda i, j: (j, 0)),      # pool vals chunk
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((tq,), jnp.int32)],  # routed bucket ids
+        interpret=interpret,
+    )(q, directory, pk, pv)
     found = found[:n] > 0
     return found, jnp.where(found, val[:n], -1)

@@ -1,10 +1,15 @@
 """Jit'd public wrappers over the Pallas kernels + table integration.
 
 `kernel_lookup` / `kernel_apply` run the paper's two hot paths through the
-TPU kernels (interpret=True on CPU, compiled on TPU). `apply_batch_kernel`
+TPU kernels (interpret mode off-TPU, compiled on TPU). `apply_batch_kernel`
 is the fast-path transaction: routing + kernel combiner, falling back to the
 table's split pass only when a bucket overflows — mirroring the paper's
 fast (ApplyWFOp) / slow (ResizeWF) structure.
+
+`table_lookup` / `table_apply` are the dispatching entry points the serving
+engine and `build_table_fns` use: kernels by default on TPU, the XLA
+single-pass transaction elsewhere (Pallas interpret mode is a correctness
+tool, not a fast path). Tile shapes come from kernels/tuning.py.
 """
 from __future__ import annotations
 
@@ -18,63 +23,97 @@ from repro.core.hashing import dir_index
 from repro.kernels import apply as kapply
 from repro.kernels import lookup as klookup
 from repro.kernels.ref import ST_FULL
+from repro.kernels.tuning import pick_tiles
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _backend() -> str:
+    return jax.default_backend()
 
 
-@partial(jax.jit, static_argnames=("cfg", "interpret"))
-def kernel_lookup(cfg: T.TableConfig, state: T.TableState, queries, *,
-                  interpret: bool | None = None):
-    """Rule-A lookup through the Pallas probe kernel."""
-    interpret = _on_cpu() if interpret is None else interpret
+def default_interpret() -> bool:
+    """Pallas TPU kernels need interpret mode on any non-TPU backend."""
+    return _backend() != "tpu"
+
+
+def kernels_are_default() -> bool:
+    """Kernels are the default hot path only where they compile natively."""
+    return _backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("cfg", "interpret", "tq", "pc", "dc"))
+def _kernel_lookup_impl(cfg: T.TableConfig, state: T.TableState, queries, *,
+                        tq: int, pc: int, dc: int, interpret: bool):
+    if cfg.dmax <= klookup.FUSED_DMAX_LIMIT and cfg.pool_size < (1 << 24):
+        return klookup.fused_probe(
+            state.directory, queries, state.keys[:-1], state.vals[:-1],
+            dmax=cfg.dmax, hash_name=cfg.hash_name, hash_shift=cfg.hash_shift,
+            tq=tq, pc=pc, dc=dc, interpret=interpret)
     h = cfg.hash_fn(queries)
     bid = state.directory[dir_index(h, cfg.dmax)]
-    pc = min(512, cfg.pool_size)
-    tq = min(256, max(8, queries.shape[0]))
     return klookup.probe(bid, queries, state.keys[:-1], state.vals[:-1],
                          tq=tq, pc=pc, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("cfg", "interpret"), donate_argnums=1)
-def apply_batch_kernel(cfg: T.TableConfig, state: T.TableState, ops: T.OpBatch,
-                       *, interpret: bool | None = None):
-    """Fast-path combining transaction via the Pallas apply kernel.
+def kernel_lookup(cfg: T.TableConfig, state: T.TableState, queries, *,
+                  interpret: bool | None = None):
+    """Rule-A lookup through the Pallas kernels.
 
-    1. route ops through the directory (announce);
-    2. kernel combiner applies everything that fits (sorted by bucket, lane);
-    3. ops reported ST_FULL fall back to the reference transaction, which
-       runs the bounded split rounds (the ResizeWF slow path).
-    """
-    interpret = _on_cpu() if interpret is None else interpret
+    Fused hash→route→probe when the directory fits VMEM (the common case:
+    dmax ≤ 17); otherwise the route runs in HBM and only the probe is a
+    kernel. Tiles resolve at every eager call (registry/env updates take
+    effect immediately — they become static args of the inner jit); when
+    this function is traced inside an outer jit the tiles freeze with that
+    trace."""
+    interpret = default_interpret() if interpret is None else interpret
+    tiles = pick_tiles(queries.shape[0], cfg.pool_size, cfg.dcap,
+                       key=f"lookup/{cfg.dmax}/{cfg.pool_size}")
+    return _kernel_lookup_impl(cfg, state, queries, tq=tiles.tq, pc=tiles.pc,
+                               dc=tiles.dc, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("cfg", "interpret", "pc"),
+         donate_argnums=1)
+def _apply_batch_kernel_impl(cfg: T.TableConfig, state: T.TableState,
+                             ops: T.OpBatch, *, pc: int, interpret: bool):
     n = cfg.n_lanes
     fresh = (ops.kind != T.NOP) & (ops.seq > state.applied_seq)
     replay = (ops.kind != T.NOP) & ~fresh
 
     h = cfg.hash_fn(ops.key)
     bid = state.directory[dir_index(h, cfg.dmax)]
-    kinds = jnp.where(fresh, ops.kind, 0)
+    # frozen buckets block every update (paper §4.5; the kernel itself is
+    # freeze-oblivious): complete those ops here with status FROZEN
+    frozen_hit = fresh & state.frozen[bid]
+    live = fresh & ~frozen_hit
+    kinds = jnp.where(live, ops.kind, 0)
     # sort by (bucket, lane) = linearization order; stable keeps lane order
-    order = jnp.argsort(jnp.where(fresh, bid, jnp.int32(cfg.pool_size + 1)),
+    order = jnp.argsort(jnp.where(live, bid, jnp.int32(cfg.pool_size + 1)),
                         stable=True)
     inv = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
-    pc = min(512, cfg.pool_size)
     pk, pv, status_sorted = kapply.grouped_apply(
         kinds[order], ops.key[order], ops.value[order], bid[order],
         state.keys[:-1], state.vals[:-1], pc=pc, interpret=interpret)
     status = status_sorted[inv]
 
+    applied = live & (status != ST_FULL)
+    hit = applied & (status == jnp.int8(T.TRUE))
+    delta = jnp.where(hit & (ops.kind == T.INS), 1, 0) \
+        - jnp.where(hit & (ops.kind == T.DEL), 1, 0)
+    counts = state.counts.at[
+        jnp.where(applied, bid, jnp.int32(cfg.pool_size))].add(delta)
+    counts = counts.at[cfg.pool_size].set(0)
+
     st = state._replace(
         keys=state.keys.at[:-1].set(pk),
         vals=state.vals.at[:-1].set(pv),
-        applied_seq=jnp.where(fresh & (status != ST_FULL), ops.seq,
+        counts=counts,
+        applied_seq=jnp.where(applied | frozen_hit, ops.seq,
                               state.applied_seq),
     )
 
     # slow path: only ops that hit a full bucket re-enter the reference
     # transaction (which splits); everyone else is masked to NOP
-    need_slow = fresh & (status == ST_FULL)
+    need_slow = live & (status == ST_FULL)
     slow_ops = T.OpBatch(
         kind=jnp.where(need_slow, ops.kind, T.NOP),
         key=ops.key, value=ops.value, seq=ops.seq)
@@ -88,7 +127,56 @@ def apply_batch_kernel(cfg: T.TableConfig, state: T.TableState, ops: T.OpBatch,
 
     st, slow_status = jax.lax.cond(need_slow.any(), run_slow, skip, st)
     final = jnp.where(need_slow, slow_status, status).astype(jnp.int8)
+    final = jnp.where(frozen_hit, jnp.int8(T.FROZEN), final)
     final = jnp.where(replay, state.last_status, final)
     final = jnp.where(ops.kind == T.NOP, st.last_status, final)
     st = st._replace(last_status=final)
     return st, T.BatchResult(status=final, error=st.error)
+
+
+def apply_batch_kernel(cfg: T.TableConfig, state: T.TableState, ops: T.OpBatch,
+                       *, interpret: bool | None = None):
+    """Fast-path combining transaction via the Pallas apply kernel.
+
+    1. route ops through the directory (announce); frozen-bucket ops
+       complete with FROZEN (the kernel is freeze-oblivious);
+    2. kernel combiner applies everything that fits (sorted by bucket, lane);
+    3. ops reported ST_FULL fall back to the reference transaction, which
+       runs the bounded split rounds (the ResizeWF slow path).
+
+    The incremental occupancy counts are maintained from the kernel's
+    status codes (TRUE = net ±1 for insert/delete) — no pool recount.
+    Tiles resolve at every eager call (see kernel_lookup on staleness).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    tiles = pick_tiles(cfg.n_lanes, cfg.pool_size,
+                       key=f"apply/{cfg.pool_size}")
+    return _apply_batch_kernel_impl(cfg, state, ops, pc=tiles.pc,
+                                    interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# dispatching entry points (the default hot path for serving + table fns)
+
+
+def table_lookup(cfg: T.TableConfig, state: T.TableState, queries, *,
+                 use_kernels: bool | None = None,
+                 interpret: bool | None = None):
+    """Rule-A lookup: Pallas fused kernel on TPU, XLA gather elsewhere."""
+    if use_kernels is None:
+        use_kernels = kernels_are_default()
+    if use_kernels:
+        return kernel_lookup(cfg, state, queries, interpret=interpret)
+    return T.lookup(cfg, state, queries)
+
+
+def table_apply(cfg: T.TableConfig, state: T.TableState, ops: T.OpBatch, *,
+                use_kernels: bool | None = None,
+                interpret: bool | None = None):
+    """Combining transaction: Pallas kernel combiner on TPU, the XLA
+    single-pass transaction elsewhere."""
+    if use_kernels is None:
+        use_kernels = kernels_are_default()
+    if use_kernels:
+        return apply_batch_kernel(cfg, state, ops, interpret=interpret)
+    return T.apply_batch(cfg, state, ops)

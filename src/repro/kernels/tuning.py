@@ -1,0 +1,95 @@
+"""Tile-size selection hooks for the table kernels.
+
+The Pallas kernels tile the (queries × pool) space; the sweet spot depends
+on batch width, pool size, directory capacity and the backend's VMEM. This
+module centralizes the choice so kernels/ops.py (and benchmarks) share one
+policy, and exposes three override layers, strongest first:
+
+  1. environment — ``REPRO_TILE_TQ`` / ``REPRO_TILE_PC`` / ``REPRO_TILE_DC``
+     force a global tile shape (quick A/B sweeps without code edits);
+  2. registry — ``register_tiles(key, TileConfig(...))`` pins tiles for a
+     workload key (autotuners write here; ``key`` is whatever string the
+     caller passes to :func:`pick_tiles`);
+  3. heuristic — VMEM-budget-derived defaults matching the kernel module
+     docstrings (TQ≤256, PC≤512, DC≤512).
+
+``autotune`` is the measurement hook: given candidate tiles and a callable,
+it times each and registers the argmin. It is deliberately dependency-free
+so benchmarks/bench_gate.py can drive it on any backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Iterable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    tq: int = 256   # query-tile rows
+    pc: int = 512   # pool-chunk rows
+    dc: int = 512   # directory-chunk entries (fused route)
+
+
+_REGISTRY: dict[str, TileConfig] = {}
+
+
+def register_tiles(key: str, tiles: TileConfig) -> None:
+    _REGISTRY[key] = tiles
+
+
+def _env_override() -> Optional[TileConfig]:
+    tq = os.environ.get("REPRO_TILE_TQ")
+    pc = os.environ.get("REPRO_TILE_PC")
+    dc = os.environ.get("REPRO_TILE_DC")
+    if tq is None and pc is None and dc is None:
+        return None
+    base = TileConfig()
+    return TileConfig(tq=int(tq or base.tq), pc=int(pc or base.pc),
+                      dc=int(dc or base.dc))
+
+
+def pick_tiles(n_queries: int, pool_size: int, dcap: int = 0,
+               key: str = "") -> TileConfig:
+    """Resolve tiles for one kernel launch (env > registry > heuristic)."""
+    env = _env_override()
+    if env is not None:
+        t = env
+    elif key and key in _REGISTRY:
+        t = _REGISTRY[key]
+    else:
+        t = TileConfig()
+    # clamp to the problem (padding beyond the array wastes whole programs)
+    tq = min(t.tq, max(8, n_queries))
+    pc = min(t.pc, max(8, pool_size))
+    dc = min(t.dc, dcap) if dcap else t.dc
+    if dcap:
+        # dc must divide the directory capacity (a power of two): snap any
+        # override down to the nearest power of two instead of crashing
+        dc = 1 << (max(dc, 1).bit_length() - 1)
+    return TileConfig(tq=tq, pc=pc, dc=dc)
+
+
+def autotune(key: str, candidates: Iterable[TileConfig],
+             run: Callable[[TileConfig], None], iters: int = 5) -> TileConfig:
+    """Time ``run`` per candidate, register and return the fastest.
+
+    ``run`` must block until the work is done (e.g. call
+    ``jax.block_until_ready``); the first call per candidate is warmup."""
+    best, best_t = None, float("inf")
+    for tiles in candidates:
+        try:
+            run(tiles)  # warmup/compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                run(tiles)
+            dt = (time.perf_counter() - t0) / iters
+        except Exception:  # noqa: BLE001 — illegal tile shapes just lose
+            continue
+        if dt < best_t:
+            best, best_t = tiles, dt
+    if best is None:
+        best = TileConfig()
+    register_tiles(key, best)
+    return best

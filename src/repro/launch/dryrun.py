@@ -30,6 +30,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.configs import ARCHS, SHAPES, cell_supported, get_config, input_specs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shardings import batch_shardings, state_shardings
@@ -197,7 +199,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     shape = SHAPES[shape_name]
     t0 = time.time()
     try:
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             jitted, arg_structs, cfg = build_step(arch, shape_name, mesh,
                                                   variant)
             lowered = jitted.lower(*arg_structs)

@@ -26,6 +26,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import get_config, smoke_config
 from repro.launch.mesh import make_local_mesh
 from repro.launch.shardings import batch_shardings, state_shardings
@@ -68,7 +69,7 @@ def main(argv=None):
     source = SyntheticLM(cfg.vocab_size, args.seq_len, args.global_batch,
                          seed=0, extras=extras)
 
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = init_train_state(cfg, jax.random.key(0))
         start_step = 0
         if args.ckpt_dir:

@@ -9,12 +9,13 @@ MLP/vocab; the roofline table surfaces the consequences per arch.
 """
 from __future__ import annotations
 
-import jax
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 
 def axis_size(name: str) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty or name not in mesh.shape:
         return 1
     return mesh.shape[name]
@@ -22,7 +23,7 @@ def axis_size(name: str) -> int:
 
 def batch_axes():
     """('pod','data') when a pod axis exists, else ('data',) — or None."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return None
     names = [n for n in ("pod", "data") if n in mesh.shape]
@@ -36,7 +37,7 @@ def constrain(x, *spec_dims):
     * 'model'-sharded dims that don't divide the axis size → replicated;
     * 'batch' is resolved to ('pod','data') / ('data',).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     resolved = []
@@ -53,4 +54,4 @@ def constrain(x, *spec_dims):
             size = mesh.shape.get(name, 1)
             resolved.append(name if name in mesh.shape and dim % size == 0
                             else None)
-    return jax.lax.with_sharding_constraint(x, P(*resolved))
+    return compat.with_spec_constraint(x, mesh, P(*resolved))

@@ -26,6 +26,7 @@ from repro.models import layers as L
 from repro.models.model import ModelConfig
 from repro.serving import kvcache as KV
 from repro.core import table as T
+from repro.kernels import ops as kops
 
 
 class EngineState(NamedTuple):
@@ -78,7 +79,7 @@ def serve_step(cfg: ModelConfig, pc: KV.PagedConfig, est: EngineState, params):
     st, page_cur, offset = KV.allocate_slots(pc, st)
     blocks = jnp.arange(pc.max_blocks, dtype=jnp.int32)
     keys = KV._key(st.seq_ids[:, None], blocks[None, :]).reshape(-1)
-    found, page_ids = T.lookup(pc.table, st.table, keys)
+    found, page_ids = kops.table_lookup(pc.table, st.table, keys)
     page_ids = jnp.where(found, page_ids, 0).reshape(B, pc.max_blocks)
     lengths = st.lengths   # already includes this token
 

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import table as T
+from repro.kernels import ops as kops
 
 BLOCK_BITS = 12                      # ≤ 4096 blocks/sequence
 
@@ -93,7 +94,7 @@ def evict(pc: PagedConfig, st: PagedState, slot_mask):
         keys = _key(jnp.where(slot_mask, st.seq_ids, 0), jnp.full_like(st.seq_ids, b))
         live = slot_mask & (b * pc.page_size < st.lengths) & (st.seq_ids >= 0)
         # look up the page first (to free it), then delete the mapping
-        found, page = T.lookup(pc.table, st_t, keys)
+        found, page = kops.table_lookup(pc.table, st_t, keys)
         do = live & found
         kinds = jnp.where(do, T.DEL, T.NOP).astype(jnp.int32)
         pad = n - kinds.shape[0]
@@ -101,7 +102,7 @@ def evict(pc: PagedConfig, st: PagedState, slot_mask):
                          jnp.pad(kinds, (0, pad)),
                          jnp.pad(keys, (0, pad)),
                          jnp.pad(jnp.zeros_like(keys), (0, pad)))
-        st_t, _ = T.apply_batch(pc.table, st_t, ops)
+        st_t, _ = kops.table_apply(pc.table, st_t, ops)
         # push freed pages
         pos = jnp.where(do, free_top + jnp.cumsum(do) - 1, pc.n_pages)
         free_pages = free_pages.at[jnp.clip(pos, 0, pc.n_pages - 1)].set(
@@ -146,9 +147,9 @@ def allocate_slots(pc: PagedConfig, st: PagedState):
                      jnp.pad(kinds, (0, pad)),
                      jnp.pad(keys, (0, pad)),
                      jnp.pad(new_page, (0, pad)))
-    table, _res = T.apply_batch(pc.table, st.table, ops)
+    table, _res = kops.table_apply(pc.table, st.table, ops)
 
-    found, page = T.lookup(pc.table, table, keys)
+    found, page = kops.table_lookup(pc.table, table, keys)
     page = jnp.where(need_page, new_page, page)
     page = jnp.where(active, page, 0)
     st = st._replace(table=table, page_alloc=st.page_alloc + grow,
@@ -189,10 +190,10 @@ def append_token(pc: PagedConfig, st: PagedState, k_new, v_new):
                      jnp.pad(kinds, (0, pad)),
                      jnp.pad(keys, (0, pad)),
                      jnp.pad(new_page, (0, pad)))
-    table, _res = T.apply_batch(pc.table, st.table, ops)
+    table, _res = kops.table_apply(pc.table, st.table, ops)
 
     # rule-A lookup of the destination page for every slot
-    found, page = T.lookup(pc.table, table, keys)
+    found, page = kops.table_lookup(pc.table, table, keys)
     page = jnp.where(need_page, new_page, page)
     page = jnp.where(active, page, 0)
 
@@ -218,7 +219,7 @@ def gather_kv(pc: PagedConfig, st: PagedState):
     B = pc.batch
     blocks = jnp.arange(pc.max_blocks, dtype=jnp.int32)
     keys = _key(st.seq_ids[:, None], blocks[None, :]).reshape(-1)
-    found, page = T.lookup(pc.table, st.table, keys)
+    found, page = kops.table_lookup(pc.table, st.table, keys)
     page = jnp.where(found, page, 0).reshape(B, pc.max_blocks)
     # [L, B, blocks, page, KV, hd]
     k = st.pages_k[:, page]

@@ -1,0 +1,94 @@
+"""`hypothesis` if installed, else a minimal deterministic fallback.
+
+The tier-1 suite must collect and run everywhere, including containers
+without hypothesis. Test modules import ``given``/``settings``/``st`` from
+here instead of from hypothesis directly. The fallback implements exactly
+the strategy surface this repo uses (``st.data()`` draws of integers,
+floats, sampled_from, and unique lists) and replays each test body
+``max_examples`` times with a fixed per-example PRNG seed — deterministic,
+so failures reproduce, at the cost of hypothesis's shrinking.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    import functools
+    import types
+
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+    def _integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def _sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(0, len(items)))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def _lists(elements, min_size=0, max_size=10, unique=False):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            out, seen, tries = [], set(), 0
+            while len(out) < size and tries < 20 * (size + 1):
+                tries += 1
+                v = elements._draw(rng)
+                if unique:
+                    if v in seen:
+                        continue
+                    seen.add(v)
+                out.append(v)
+            return out
+        return _Strategy(draw)
+
+    class _Data:
+        """The object a ``st.data()`` parameter receives per example."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy._draw(self._rng)
+
+    _DATA_MARK = object()
+
+    def _data():
+        return _DATA_MARK
+
+    st = types.SimpleNamespace(
+        integers=_integers, floats=_floats, sampled_from=_sampled_from,
+        booleans=_booleans, lists=_lists, data=_data)
+
+    def given(*strategies):
+        assert strategies == (_DATA_MARK,), (
+            "fallback shim only supports @given(st.data())")
+
+        def deco(test):
+            @functools.wraps(test)
+            def wrapper(*args, **kw):
+                for i in range(getattr(wrapper, "_max_examples", 20)):
+                    rng = _np.random.default_rng(0xC0FFEE + 1013 * i)
+                    test(*args, _Data(rng), **kw)
+            # pytest must not introspect the wrapped signature: the ``data``
+            # parameter would look like a missing fixture
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(test):
+            test._max_examples = max_examples
+            return test
+        return deco

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or fallback shim
 
 from repro.core import table as T
 from repro.core.invariants import check_invariants, to_dict

@@ -1,0 +1,221 @@
+"""Single-pass combining fast path ≡ serial wave-loop reference.
+
+The rule-C fast path (core/table._fast_pass) must be observationally
+identical to the wave loop it replaces: same status codes, same exactly-once
+sequence numbers, same error flag, and the same table *contents* (slot
+layout inside a bucket is free — lookups, splits and merges are all
+layout-oblivious — so contents are compared as per-directory-entry
+(depth, prefix, item-set) structure plus the flat dict).
+
+Covers the acceptance grid: 0% / 50% / 100% insert mixes, intra-batch
+duplicate keys, and bucket-overflow batches that force the wave fallback
+and the split pass.
+"""
+import dataclasses
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hyp import given, settings, st  # hypothesis or fallback shim
+
+from repro.core import table as T
+from repro.core.invariants import check_invariants, to_dict
+
+jax.config.update("jax_platform_name", "cpu")
+
+_EMPTY = -2147483648
+
+
+def base_cfg(**kw):
+    d = dict(dmax=6, bucket_size=4, pool_size=256, n_lanes=8,
+             hash_name="fmix32", initial_depth=0)
+    d.update(kw)
+    return T.TableConfig(**d)
+
+
+@lru_cache(maxsize=None)
+def pair(cfg):
+    """(fast, reference) compiled transactions for one config."""
+    ref_cfg = dataclasses.replace(cfg, use_fast_path=False)
+    assert cfg.use_fast_path
+    return (jax.jit(partial(T.apply_batch, cfg)),
+            jax.jit(partial(T.apply_batch, ref_cfg)))
+
+
+def structure(cfg, state):
+    """Per-directory-entry (depth, prefix, item-set): layout-free contents."""
+    d = np.asarray(state.directory)
+    keys = np.asarray(state.keys)
+    vals = np.asarray(state.vals)
+    out = {}
+    for e in range(cfg.dcap):
+        b = int(d[e])
+        occ = keys[b] != _EMPTY
+        out[e] = (int(state.bdepth[b]), int(state.bprefix[b]),
+                  frozenset(zip(keys[b][occ].tolist(), vals[b][occ].tolist())))
+    return out
+
+
+def assert_equivalent(cfg, sf, sr, rf, rr):
+    np.testing.assert_array_equal(np.asarray(rf.status), np.asarray(rr.status))
+    np.testing.assert_array_equal(np.asarray(sf.applied_seq),
+                                  np.asarray(sr.applied_seq))
+    np.testing.assert_array_equal(np.asarray(sf.last_status),
+                                  np.asarray(sr.last_status))
+    assert bool(rf.error) == bool(rr.error)
+    assert to_dict(cfg, sf) == to_dict(cfg, sr)
+    assert structure(cfg, sf) == structure(cfg, sr)
+    check_invariants(cfg, sf, allow_error=bool(rf.error))
+
+
+def run_mix(cfg, ins_pct, nsteps, seed, keyspace):
+    apply_f, apply_r = pair(cfg)
+    sf, sr = T.init_table(cfg), T.init_table(cfg)
+    rng = np.random.default_rng(seed)
+    n = cfg.n_lanes
+    # seed both tables identically so deletes have something to hit
+    warm = rng.choice(keyspace, size=n, replace=False).astype(np.int32)
+    ops = T.make_ops(cfg, sf, np.full(n, T.INS, np.int32), warm, warm)
+    sf, _ = apply_f(sf, ops)
+    sr, _ = apply_r(sr, ops)
+    for step in range(nsteps):
+        is_ins = rng.random(n) < ins_pct / 100.0
+        kinds = np.where(is_ins, T.INS, T.DEL).astype(np.int32)
+        # small draw pool → frequent intra-batch duplicate keys
+        keys = rng.choice(keyspace, size=n).astype(np.int32)
+        vals = rng.integers(0, 1000, size=n).astype(np.int32)
+        ops = T.make_ops(cfg, sf, kinds, keys, vals)
+        sf, rf = apply_f(sf, ops)
+        sr, rr = apply_r(sr, ops)
+        assert_equivalent(cfg, sf, sr, rf, rr)
+
+
+def test_equivalence_insert_mix_grid():
+    """Acceptance grid: 0 / 50 / 100 % inserts, duplicates in every batch."""
+    keyspace = np.arange(1, 25)  # << lanes*steps → heavy duplication
+    for ins_pct in (0, 50, 100):
+        run_mix(base_cfg(), ins_pct, nsteps=25, seed=ins_pct, keyspace=keyspace)
+
+
+def test_equivalence_overflow_heavy():
+    """Tiny buckets: most batches overflow → wave fallback + split pass."""
+    cfg = base_cfg(bucket_size=2, dmax=5, pool_size=128, n_lanes=16)
+    run_mix(cfg, 80, nsteps=20, seed=7, keyspace=np.arange(1, 40))
+
+
+def test_equivalence_skewed_identity_hash():
+    """Identity hash with clustered top bits: contended bucket groups."""
+    cfg = base_cfg(hash_name="identity", bucket_size=2, dmax=6, pool_size=128)
+    keyspace = ((np.arange(1, 17) % 4) << 28) | np.arange(1, 17)
+    run_mix(cfg, 60, nsteps=20, seed=11, keyspace=keyspace.astype(np.int64))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_equivalence_property(data):
+    """Random configs × random batches, duplicate keys included."""
+    bucket_size = data.draw(st.sampled_from([2, 4, 8]))
+    n_lanes = data.draw(st.sampled_from([4, 8, 16]))
+    cfg = base_cfg(bucket_size=bucket_size, n_lanes=n_lanes,
+                   dmax=data.draw(st.sampled_from([4, 6])), pool_size=128)
+    apply_f, apply_r = pair(cfg)
+    sf, sr = T.init_table(cfg), T.init_table(cfg)
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    kmax = data.draw(st.sampled_from([6, 20, 200]))
+    for _ in range(data.draw(st.integers(1, 8))):
+        kinds = rng.integers(0, 3, size=n_lanes).astype(np.int32)  # incl NOP
+        keys = rng.integers(1, kmax, size=n_lanes).astype(np.int32)
+        vals = rng.integers(0, 99, size=n_lanes).astype(np.int32)
+        ops = T.make_ops(cfg, sf, kinds, keys, vals)
+        sf, rf = apply_f(sf, ops)
+        sr, rr = apply_r(sr, ops)
+        assert_equivalent(cfg, sf, sr, rf, rr)
+
+
+def test_equivalence_sorted_links_variant(monkeypatch):
+    """Force the sort-based segmented scans (the wide-batch implementation
+    of the links contract) and re-run the mix grid — it must match the
+    wave reference exactly like the pairwise default does."""
+    monkeypatch.setattr(T, "_PAIRWISE_MAX_LANES", 0)
+    pair.cache_clear()
+    keyspace = np.arange(1, 25)
+    for ins_pct in (0, 50, 100):
+        run_mix(base_cfg(n_lanes=16), ins_pct, nsteps=12, seed=ins_pct + 3,
+                keyspace=keyspace)
+    cfg = base_cfg(bucket_size=2, dmax=5, pool_size=128, n_lanes=16)
+    run_mix(cfg, 80, nsteps=12, seed=17, keyspace=np.arange(1, 40))
+    pair.cache_clear()  # don't leak sorted-variant jits to other tests
+
+
+def test_replay_seqnums_identical_on_fast_path():
+    """Exactly-once via the fast path: replayed announcements don't re-run."""
+    cfg = base_cfg(n_lanes=4)
+    apply_f, apply_r = pair(cfg)
+    sf, sr = T.init_table(cfg), T.init_table(cfg)
+    kinds = jnp.asarray([T.INS, T.INS, 0, 0], jnp.int32)
+    keys = jnp.asarray([5, 5, 0, 0], jnp.int32)   # duplicate key in batch
+    vals = jnp.asarray([1, 2, 0, 0], jnp.int32)
+    ops = T.make_ops(cfg, sf, kinds, keys, vals)
+    sf, rf = apply_f(sf, ops)
+    sr, rr = apply_r(sr, ops)
+    assert_equivalent(cfg, sf, sr, rf, rr)
+    assert [int(x) for x in rf.status[:2]] == [T.TRUE, T.FALSE]
+    # replay: stored results, no re-execution, on both paths
+    sf2, rf2 = apply_f(sf, ops)
+    sr2, rr2 = apply_r(sr, ops)
+    assert_equivalent(cfg, sf2, sr2, rf2, rr2)
+    assert to_dict(cfg, sf2) == {5: 2}
+
+
+def test_fresh_insert_claims_delete_freed_slot():
+    """Scatter-ordering regression: [DEL k1, INS k2] in one batch where
+    k2's assigned free slot IS the slot the delete just cleared — the
+    insert must win (two sequential scatters; one combined scatter with
+    duplicate indices has unspecified order)."""
+    cfg = base_cfg(hash_name="identity", bucket_size=2, dmax=4, pool_size=32,
+                   n_lanes=4)
+    apply_f, apply_r = pair(cfg)
+    k1 = int(np.int32(np.uint32(0x10 << 24)))
+    k2 = int(np.int32(np.uint32(0x11 << 24)))
+    sf, sr = T.init_table(cfg), T.init_table(cfg)
+    kk = jnp.zeros(4, jnp.int32).at[0].set(k1)
+    ki = jnp.zeros(4, jnp.int32).at[0].set(T.INS)
+    sf, _ = apply_f(sf, T.make_ops(cfg, sf, ki, kk, kk))
+    sr, _ = apply_r(sr, T.make_ops(cfg, sr, ki, kk, kk))
+    kinds = jnp.asarray([T.DEL, T.INS, 0, 0], jnp.int32)
+    keys = jnp.asarray([k1, k2, 0, 0], jnp.int32)
+    vals = jnp.asarray([0, 77, 0, 0], jnp.int32)
+    sf, rf = apply_f(sf, T.make_ops(cfg, sf, kinds, keys, vals))
+    sr, rr = apply_r(sr, T.make_ops(cfg, sr, kinds, keys, vals))
+    assert_equivalent(cfg, sf, sr, rf, rr)
+    assert to_dict(cfg, sf) == {k2: 77}
+    assert [int(x) for x in rf.status[:2]] == [T.TRUE, T.TRUE]
+
+
+def test_counts_survive_merge_roundtrip():
+    """Incremental counts stay exact through split → delete → merge."""
+    cfg = base_cfg(hash_name="identity", bucket_size=2, dmax=6, pool_size=64,
+                   n_lanes=8)
+    apply_f, _ = pair(cfg)
+    merge = jax.jit(partial(T.merge_buddies, cfg))
+    s = T.init_table(cfg)
+    ks = np.asarray([(0x00 << 24) | 1, 0x40 << 24, 0xC0 << 24], np.int64)
+    for k in ks:
+        kinds = np.zeros(8, np.int32)
+        kinds[0] = T.INS
+        keys = np.zeros(8, np.int32)
+        keys[0] = np.int32(np.uint32(k))
+        ops = T.make_ops(cfg, s, kinds, keys, keys)
+        s, _r = apply_f(s, ops)
+    check_invariants(cfg, s)
+    kinds = np.zeros(8, np.int32)
+    kinds[0] = T.DEL
+    keys = np.zeros(8, np.int32)
+    keys[0] = np.int32(np.uint32(ks[0]))
+    s, _r = apply_f(s, T.make_ops(cfg, s, kinds, keys, keys))
+    s, ok = merge(s, 0, int(s.depth) - 1)
+    assert bool(ok)
+    check_invariants(cfg, s)
+    assert int(T.table_size(s)) == 2

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or fallback shim
 
 from repro.core import table as T
 from repro.core.invariants import to_dict
@@ -89,6 +89,46 @@ def test_probe_hypothesis(data):
     f_k, v_k = probe(bid, q, pk, pv, tq=16, pc=16, interpret=True)
     np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
     np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_ref))
+
+
+# ---------------------------------------------------------------------------
+# fused hash → route → probe kernel
+
+
+@pytest.mark.parametrize("dmax,P,B,N,hash_name,shift", [
+    (4, 16, 4, 33, "fmix32", 0),
+    (6, 64, 8, 100, "fmix32", 0),
+    (6, 64, 8, 64, "identity", 0),
+    (5, 32, 4, 50, "fmix32", 2),     # sharded-table route (hash_shift)
+])
+def test_fused_probe_matches_unfused_route(dmax, P, B, N, hash_name, shift):
+    from repro.core.hashing import HASH_FNS, dir_index
+    from repro.kernels.lookup import fused_probe
+
+    rng = np.random.default_rng(dmax * 100 + N)
+    pk, pv = random_pool(rng, P, B)
+    # random (valid) directory over the pool
+    directory = jnp.asarray(rng.integers(0, P, size=1 << dmax), jnp.int32)
+    q = jnp.asarray(rng.integers(-(1 << 31) + 1, 1 << 31, size=N), jnp.int32)
+    h = HASH_FNS[hash_name](q) << shift if shift else HASH_FNS[hash_name](q)
+    bid = directory[dir_index(h, dmax)]
+    f_ref, v_ref = kref.probe_ref(bid, q, pk, pv)
+    f_k, v_k = fused_probe(directory, q, pk, pv, dmax=dmax,
+                           hash_name=hash_name, hash_shift=shift,
+                           tq=16, pc=16, dc=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_ref))
+
+
+def test_tile_tuning_env_and_registry(monkeypatch):
+    from repro.kernels import tuning
+
+    t = tuning.pick_tiles(1000, 300, 64)
+    assert t.tq <= 256 and t.pc <= 300 and t.dc <= 64
+    tuning.register_tiles("k1", tuning.TileConfig(tq=32, pc=64, dc=16))
+    assert tuning.pick_tiles(1000, 1000, 0, key="k1").tq == 32
+    monkeypatch.setenv("REPRO_TILE_TQ", "8")
+    assert tuning.pick_tiles(1000, 1000, 0, key="k1").tq == 8  # env wins
 
 
 # ---------------------------------------------------------------------------
@@ -195,9 +235,50 @@ def test_kernel_fastpath_equals_reference_transaction():
                                       np.asarray(r_ref.status),
                                       err_msg=f"step {step}")
         assert to_dict(cfg, s_ker) == to_dict(cfg, s_ref), f"step {step}"
+        # kernel path maintains the incremental occupancy counts exactly
+        occ = (np.asarray(s_ker.keys) != EMPTY).sum(-1)
+        live = np.asarray(s_ker.live)
+        assert (np.asarray(s_ker.counts)[live] == occ[live]).all(), \
+            f"step {step}: kernel counts out of sync"
     # kernel lookups agree with reference lookups on the final state
     q = jnp.asarray(rng.integers(1, 200, size=64), jnp.int32)
     f1, v1 = T.lookup(cfg, s_ref, q)
     f2, v2 = fns["lookup_kernel"](s_ker, q)
     np.testing.assert_array_equal(np.asarray(f2), np.asarray(f1))
     np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
+
+
+def test_kernel_path_blocks_frozen_buckets():
+    """The kernel combiner is freeze-oblivious; the wrapper must complete
+    frozen-bucket ops with FROZEN and leave the bucket untouched (paper
+    §4.5), exactly like the reference transaction."""
+    cfg = T.TableConfig(hash_name="identity", bucket_size=4, dmax=6,
+                        pool_size=64, n_lanes=8)
+    fns = table_fns(cfg)
+    s = T.init_table(cfg)
+    ks = [np.int32(np.uint32(v)) for v in
+          (0x01 << 24 | 1, 0x11 << 24, 0x21 << 24, 0x90 << 24, 0xC0 << 24)]
+    for kind, k in [(T.INS, k) for k in ks] + \
+            [(T.DEL, ks[1]), (T.DEL, ks[2])]:  # shrink so buddies can merge
+        kinds = np.zeros(8, np.int32)
+        kinds[0] = kind
+        keys = np.zeros(8, np.int32)
+        keys[0] = k
+        ops = T.make_ops(cfg, s, kinds, keys, keys)
+        s, _ = fns["apply_ref"](s, ops)
+    depth = int(s.depth)
+    assert depth >= 1
+    s, ok = T.freeze_buddies(cfg, s, 0, depth - 1)
+    assert bool(ok)
+    # an insert routed into the frozen bucket, via the kernel path
+    kinds = np.zeros(8, np.int32)
+    kinds[0] = T.INS
+    keys = np.zeros(8, np.int32)
+    keys[0] = np.int32(np.uint32(0x02 << 24))
+    ops = T.make_ops(cfg, s, kinds, keys, keys)
+    s_ker, r_ker = fns["apply_kernel"](jax.tree.map(jnp.copy, s), ops)
+    s_ref, r_ref = fns["apply_ref"](s, ops)
+    assert int(r_ker.status[0]) == int(r_ref.status[0]) == T.FROZEN
+    assert to_dict(cfg, s_ker) == to_dict(cfg, s_ref)
+    np.testing.assert_array_equal(np.asarray(s_ker.applied_seq),
+                                  np.asarray(s_ref.applied_seq))
