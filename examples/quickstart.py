@@ -1,32 +1,47 @@
 """Quickstart: the wait-free extendible hash table in five minutes.
 
+One typed handle — `Table` — over every backend and placement; batches of
+any length; values that can be a pytree of typed fields, not just an i32.
+
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import table as T
+from repro import Table, TableSpec
 from repro.core.invariants import check_invariants, to_dict
 
 # a table with 2^10 max directory entries, 8-slot buckets, 16 op lanes
-cfg = T.TableConfig(dmax=10, bucket_size=8, pool_size=1024, n_lanes=16)
-fns = T.build_table_fns(cfg)
-state = fns["init"]()
+spec = TableSpec(dmax=10, bucket_size=8, pool_size=1024, n_lanes=16)
+t = Table.create(spec)
 
-# one wait-free combining transaction: 16 lanes announce inserts,
-# the batched combiner applies them all (splitting buckets as needed)
-keys = jnp.asarray(np.arange(100, 116), jnp.int32)
-vals = keys * 7
-state, res = fns["insert_batch"](state, keys, vals)
+# wait-free combining transactions: the batch announces its ops, the
+# batched combiner applies them all (splitting buckets as needed). Any
+# batch length works — 21 ops become two NOP-padded 16-lane transactions.
+keys = np.arange(100, 121, dtype=np.int32)
+t, res = t.insert(keys, keys * 7)
 print("insert statuses:", np.asarray(res.status))      # all 1 = fresh
 
 # rule-A lookups: pure gathers, zero synchronization
-found, got = fns["lookup"](state, jnp.asarray([100, 115, 999], jnp.int32))
+found, got = t.lookup([100, 115, 999])
 print("lookup:", np.asarray(found), np.asarray(got))
 
-# deletes; mixed batches via make_ops/apply_batch
-state, res = fns["delete_batch"](state, keys)
+# deletes; mixed batches go through t.apply(kinds, keys, values)
+t, res = t.delete(keys)
 print("delete statuses:", np.asarray(res.status))      # all 1 = present
 
-check_invariants(cfg, state)
-print("final size:", int(fns["size"](state)), "- content:", to_dict(cfg, state))
+check_invariants(t.config, t.state)
+print("size after deletes:", int(t.size()))
+
+# --- typed value schemas: payloads beyond one i32 --------------------------
+spec = TableSpec(dmax=10, n_lanes=16,
+                 value_schema={"owner": jnp.int32,
+                               "weight": (jnp.float32, ())})
+t = Table.create(spec)
+t, _ = t.insert([7, 8, 9], {"owner": [70, 80, 90],
+                            "weight": [0.7, 0.8, 0.9]})
+found, payload = t.lookup([7, 9, 11])
+print("schema lookup:", np.asarray(found),
+      np.asarray(payload["owner"]), np.asarray(payload["weight"]))
+check_invariants(t.config, t.state)
+print("final content (raw handles):", to_dict(t.config, t.state))

@@ -3,28 +3,24 @@
 Run: PYTHONPATH=src python examples/resize_demo.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import table as T
+from repro import Table, TableSpec
 from repro.core.invariants import check_invariants
 
-cfg = T.TableConfig(dmax=12, bucket_size=4, pool_size=4096, n_lanes=64,
-                    initial_depth=1)
-fns = T.build_table_fns(cfg)
-state = fns["init"]()
+spec = TableSpec(dmax=12, bucket_size=4, pool_size=4096, n_lanes=64,
+                 initial_depth=1)
+t = Table.create(spec)
 rng = np.random.default_rng(0)
 keys = rng.choice(np.arange(1, 1 << 30), size=2048, replace=False)
 
 print(f"{'inserted':>9} {'depth':>6} {'buckets':>8} {'load':>6}")
-for i in range(0, len(keys), cfg.n_lanes):
-    chunk = keys[i:i + cfg.n_lanes].astype(np.int32)
-    state, res = fns["insert_batch"](state, jnp.asarray(chunk),
-                                     jnp.asarray(chunk))
+for i in range(0, len(keys), 4 * spec.n_lanes):
+    chunk = keys[i:i + 4 * spec.n_lanes].astype(np.int32)  # 4 transactions
+    t, res = t.insert(chunk, chunk)
     assert not bool(res.error)
-    if (i // cfg.n_lanes) % 4 == 3:
-        n_items = int(fns["size"](state))
-        n_buckets = int(state.live.sum())
-        print(f"{i + cfg.n_lanes:>9} {int(state.depth):>6} {n_buckets:>8} "
-              f"{n_items / (n_buckets * cfg.bucket_size):>6.2f}")
-check_invariants(cfg, state)
-print("done: wait-free growth from 2 buckets to depth", int(state.depth))
+    n_items = int(t.size())
+    n_buckets = int(t.state.live.sum())
+    print(f"{i + len(chunk):>9} {int(t.state.depth):>6} {n_buckets:>8} "
+          f"{n_items / (n_buckets * spec.bucket_size):>6.2f}")
+check_invariants(t.config, t.state)
+print("done: wait-free growth from 2 buckets to depth", int(t.state.depth))

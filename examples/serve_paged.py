@@ -10,7 +10,6 @@ import numpy as np
 import jax
 
 from repro.configs.archs import smoke_config
-from repro.core import table as T
 from repro.models.model import init_params
 from repro.serving import kvcache as KV
 from repro.serving.engine import EngineState, init_engine, make_paged_config, serve_step
@@ -29,8 +28,8 @@ for step in range(24):
     if step % 8 == 7:
         print(f"step {step + 1}: lengths={np.asarray(est.paged.lengths)} "
               f"pages={int(est.paged.page_alloc)} "
-              f"mappings={int(T.table_size(est.paged.table))} "
-              f"dir_depth={int(est.paged.table.depth)}")
+              f"mappings={int(est.paged.table.size())} "
+              f"dir_depth={int(est.paged.table.state.depth)}")
 
 # sequence 2 finishes: evict (wait-free DELETEs) and admit a new request
 st = KV.evict(pc, est.paged, jnp.asarray([False, True, False, False]))
@@ -41,5 +40,5 @@ for _ in range(8):
     est, _ = serve_step(cfg, pc, est, params)
 print(f"after evict/admit: lengths={np.asarray(est.paged.lengths)} "
       f"free_pages={int(est.paged.free_top)} "
-      f"mappings={int(T.table_size(est.paged.table))}")
+      f"mappings={int(est.paged.table.size())}")
 print("paged serving OK")

@@ -1,0 +1,33 @@
+"""WF-Ext: an efficient wait-free resizable hash table, reproduced on JAX.
+
+Public API (see DESIGN.md "Public API")::
+
+    from repro import Table, TableSpec
+
+    t = Table.create(TableSpec(dmax=10, n_lanes=16))
+    t, res = t.insert(keys, values)
+    found, values = t.lookup(keys)
+
+Everything else (raw transactions, kernels, serving, training) lives in
+subpackages; ``repro.table_api`` is the facade module itself. Exports
+resolve lazily (PEP 562): ``import repro`` has no JAX import side effects,
+which entry points that must set ``XLA_FLAGS`` first rely on.
+"""
+
+_FACADE_EXPORTS = (
+    "Table", "TableSpec", "ValueField", "BatchResult", "create",
+    "NOP", "INS", "DEL",
+)
+
+__all__ = list(_FACADE_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _FACADE_EXPORTS:
+        from repro import table_api
+        return getattr(table_api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

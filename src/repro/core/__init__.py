@@ -1,3 +1,43 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core WF-Ext table: the paper's wait-free resizable hash table in JAX.
+
+Stable import surface::
+
+    from repro.core import TableConfig, init_table, apply_batch, lookup
+    from repro.core import TableSpec          # declarative spec (facade)
+
+The typed handle lives one level up: ``from repro import Table, TableSpec``.
+
+Exports resolve lazily (PEP 562) so that ``import repro.core`` stays free
+of JAX initialization side effects — ``repro.core.dist_check`` must be able
+to set ``XLA_FLAGS`` before anything touches jax.
+"""
+
+_TABLE_EXPORTS = (
+    # op kinds
+    "NOP", "INS", "DEL",
+    # status codes
+    "FALSE", "TRUE", "PENDING", "FROZEN", "OVERFLOW",
+    # types
+    "TableConfig", "TableState", "OpBatch", "BatchResult",
+    # transactions + helpers
+    "init_table", "apply_batch", "lookup", "make_ops", "pad_ops",
+    "insert_batch", "delete_batch", "table_size",
+    "freeze_buddies", "merge_buddies", "build_table_fns",
+)
+_SPEC_EXPORTS = ("TableSpec", "ValueField", "normalize_schema")
+
+__all__ = list(_TABLE_EXPORTS + _SPEC_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _TABLE_EXPORTS:
+        from repro.core import table
+        return getattr(table, name)
+    if name in _SPEC_EXPORTS:
+        from repro.core import spec
+        return getattr(spec, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -62,11 +62,18 @@ def _dest_shard(cfg: DistConfig, keys):
     return (h >> jnp.uint32(32 - cfg.shard_bits)).astype(jnp.int32)
 
 
-def dist_apply_batch(cfg: DistConfig, mesh, state, ops: T.OpBatch):
+def dist_apply_batch(cfg: DistConfig, mesh, state, ops: T.OpBatch, *,
+                     apply_fn=None):
     """One distributed combining transaction.
 
     state: stacked TableState sharded P(model); ops: OpBatch sharded
-    P(data). Returns (state', BatchResult sharded P(data))."""
+    P(data). Returns (state', BatchResult sharded P(data)).
+
+    ``apply_fn(local_cfg, state, ops)`` is the per-shard combining
+    transaction (default: the XLA single-pass ``table.apply_batch``); the
+    Table facade routes the Pallas / interpret backends through it."""
+    if apply_fn is None:
+        apply_fn = T.apply_batch
 
     def body(state_blk, ops_blk):
         # squeeze the per-device shard (model axis block size 1)
@@ -84,7 +91,7 @@ def dist_apply_batch(cfg: DistConfig, mesh, state, ops: T.OpBatch):
         mine = (dest == j) & (kind != T.NOP)
         gops = T.OpBatch(kind=jnp.where(mine, kind, T.NOP), key=key,
                          value=value, seq=seq)
-        st2, res = T.apply_batch(lcfg, st, gops)
+        st2, res = apply_fn(lcfg, st, gops)
 
         # results ride home on a masked psum over the model axis
         contrib = jnp.where(mine, res.status.astype(jnp.int32), 0)
@@ -109,8 +116,13 @@ def dist_apply_batch(cfg: DistConfig, mesh, state, ops: T.OpBatch):
     return fn(state, ops)
 
 
-def dist_lookup(cfg: DistConfig, mesh, state, queries):
-    """Rule-A distributed lookup: local gather + masked psum combine."""
+def dist_lookup(cfg: DistConfig, mesh, state, queries, *, lookup_fn=None):
+    """Rule-A distributed lookup: local gather + masked psum combine.
+
+    ``lookup_fn(local_cfg, state, queries)`` is the per-shard probe
+    (default: the XLA gather ``table.lookup``)."""
+    if lookup_fn is None:
+        lookup_fn = T.lookup
 
     def body(state_blk, q_blk):
         st = jax.tree.map(lambda x: x[0], state_blk)
@@ -119,7 +131,7 @@ def dist_lookup(cfg: DistConfig, mesh, state, queries):
         j = jax.lax.axis_index(cfg.model_axis)
         dest = _dest_shard(cfg, q)
         mine = dest == j
-        found, vals = T.lookup(lcfg, st, q)
+        found, vals = lookup_fn(lcfg, st, q)
         f = jax.lax.psum(jnp.where(mine, found, False).astype(jnp.int32),
                          cfg.model_axis)
         v = jax.lax.psum(jnp.where(mine & found, vals, 0), cfg.model_axis)

@@ -2,9 +2,10 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 # ^ 8 host devices for the self-check; run via tests/test_dist_table.py
 
-"""Self-check for the distributed table: a (data=4, model=2) mesh runs a
-random batched workload; final map + statuses must equal the single-device
-reference table run lane-for-lane. Exit code 0 = pass."""
+"""Self-check for the distributed table, through the Table facade: a
+(data=4, model=2) mesh runs a random batched workload as a sharded `Table`;
+final map + statuses must equal (a) a local `Table` and (b) the paper-
+literal sequential reference, lane-for-lane. Exit code 0 = pass."""
 import sys
 
 import jax
@@ -12,26 +13,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.core import dist as D
 from repro.core import table as T
 from repro.core.invariants import to_dict
+from repro.core.reference import SeqExtHash
+from repro.core.spec import TableSpec
+from repro.table_api import Table
 
 
 def main():
     mesh = jax.make_mesh((4, 2), ("data", "model"))
-    base = T.TableConfig(dmax=8, bucket_size=4, pool_size=256, n_lanes=0)
-    cfg = D.DistConfig(shard_bits=1, local=base)
     n_glob = 16  # 4 data shards × 4 lanes
 
-    state = D.init_dist_table(cfg, n_glob)
-    state = jax.device_put(state, jax.tree.map(
-        lambda _: jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec("model")), state))
+    # sharded: top hash bit picks the shard, each shard a dmax=8 WF-Ext
+    sh_spec = TableSpec(dmax=8, bucket_size=4, pool_size=256, n_lanes=n_glob,
+                        placement="sharded", shard_bits=1)
+    # local oracle: one dmax=9 table sees the same keyspace partition
+    lo_spec = TableSpec(dmax=9, bucket_size=4, pool_size=512, n_lanes=n_glob)
 
-    # single-device reference: same global op order
-    ref_cfg = T.TableConfig(dmax=9, bucket_size=4, pool_size=512,
-                            n_lanes=n_glob)
-    ref_state = T.init_table(ref_cfg)
+    t_sh = Table.create(sh_spec, mesh)
+    t_lo = Table.create(lo_spec)
+    ref = SeqExtHash(dmax=9, bucket_size=4)
 
     rng = np.random.default_rng(0)
     with compat.set_mesh(mesh):
@@ -42,33 +43,41 @@ def main():
             keys = rng.choice(np.arange(1, 4000), size=n_glob,
                               replace=False).astype(np.int32)
             vals = rng.integers(0, 999, size=n_glob).astype(np.int32)
-            seq = np.full(n_glob, step + 1, np.int32)
-            ops = T.OpBatch(kind=jnp.asarray(kinds), key=jnp.asarray(keys),
-                            value=jnp.asarray(vals), seq=jnp.asarray(seq))
-            state, res = D.dist_apply_batch(cfg, mesh, state, ops)
-            ref_state, ref_res = T.apply_batch(ref_cfg, ref_state, ops)
-            got = np.asarray(res.status)
-            want = np.asarray(ref_res.status)
-            assert (got == want).all(), (step, got, want)
-            assert not bool(res.error)
+            t_sh, res_sh = t_sh.apply(kinds, keys, vals)
+            t_lo, res_lo = t_lo.apply(kinds, keys, vals)
+            want = np.asarray([
+                ref.insert(int(k), int(v)) if kk == T.INS
+                else ref.delete(int(k))
+                for kk, k, v in zip(kinds, keys, vals)], np.int8)
+            got_sh = np.asarray(res_sh.status)
+            got_lo = np.asarray(res_lo.status)
+            assert (got_sh == want).all(), (step, got_sh, want)
+            assert (got_lo == want).all(), (step, got_lo, want)
+            assert not bool(res_sh.error) and not bool(res_lo.error)
 
             q = rng.choice(np.arange(1, 4000), size=n_glob).astype(np.int32)
-            f1, v1 = D.dist_lookup(cfg, mesh, state, jnp.asarray(q))
-            f2, v2 = T.lookup(ref_cfg, ref_state, jnp.asarray(q))
+            f1, v1 = t_sh.lookup(q)
+            f2, v2 = t_lo.lookup(q)
+            want_fv = [ref.lookup(int(k)) for k in q]
             assert (np.asarray(f1) == np.asarray(f2)).all(), step
             assert (np.asarray(v1) == np.asarray(v2)).all(), step
+            assert (np.asarray(f1) == np.asarray(
+                [f for f, _ in want_fv])).all(), step
+            assert (np.asarray(v1) == np.asarray(
+                [v for _, v in want_fv])).all(), step
 
-    # final content equality: union of shard dicts == reference dict
+    # final content equality: union of shard dicts == local == reference
     got_map = {}
-    n_shards = cfg.n_shards
-    lcfg = cfg.local_cfg(n_glob)
-    for s in range(n_shards):
-        shard_state = jax.tree.map(lambda x: np.asarray(x)[s], state)
+    lcfg = sh_spec.table_config()
+    for s in range(sh_spec.n_shards):
+        shard_state = jax.tree.map(lambda x: np.asarray(x)[s], t_sh.state)
         got_map.update(to_dict(lcfg, T.TableState(*shard_state)))
-    ref_map = to_dict(ref_cfg, ref_state)
-    assert got_map == ref_map, (len(got_map), len(ref_map))
-    print(f"dist table OK: {len(got_map)} items across {n_shards} shards, "
-          f"12 transactions, statuses lane-exact")
+    lo_map = to_dict(lo_spec.table_config(), t_lo.state)
+    ref_map = ref.as_dict()
+    assert got_map == lo_map == ref_map, (
+        len(got_map), len(lo_map), len(ref_map))
+    print(f"dist table OK: {len(got_map)} items across {sh_spec.n_shards} "
+          f"shards, 12 transactions, statuses lane-exact")
 
     check_compression(mesh)
     return 0

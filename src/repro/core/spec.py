@@ -1,0 +1,182 @@
+"""Declarative table specification: ONE object describing a table end to end.
+
+``TableSpec`` unifies everything a caller previously assembled by hand —
+the core :class:`~repro.core.table.TableConfig` knobs, the placement
+(``local`` vs ``sharded`` over a mesh axis), the compute backend
+(``auto`` | ``xla`` | ``pallas`` | ``interpret``), and a **value schema**:
+a pytree of per-item payload fields so table values are no longer limited
+to a single i32 word.
+
+The spec is a frozen, hashable dataclass, which makes it legal static
+metadata for ``jax.jit`` / pytree aux data — the :class:`repro.table_api.Table`
+handle carries its spec through ``jit``/``scan``/``shard_map`` for free.
+
+Value schemas
+-------------
+A schema is declared as a mapping ``name -> (dtype, per-item shape)``::
+
+    schema = {"page": jnp.int32, "score": (jnp.float32, (4,))}
+
+and is normalized to a sorted tuple of :class:`ValueField` (hashable). When
+a schema is present the table stores payloads in a **struct-of-slabs side
+store**: one array of shape ``[slab_capacity + 1, *field_shape]`` per field,
+indexed by a stable integer *handle* that travels in the table's i32 value
+word. Keying the slabs by handle — not by (bucket, slot) — keeps every
+resize action (split / merge / directory doubling) payload-oblivious: items
+migrate between buckets carrying their handle, and the slabs never move.
+Row ``slab_capacity`` is a write-trash row, mirroring the bucket pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import table as T
+
+PLACEMENTS = ("local", "sharded")
+BACKENDS = ("auto", "xla", "pallas", "interpret")
+
+
+class ValueField(NamedTuple):
+    """One leaf of a value schema (hashable normal form)."""
+
+    name: str
+    dtype: str            # canonical numpy dtype name, e.g. "int32"
+    shape: Tuple[int, ...] = ()   # per-item shape ([] = scalar payload)
+
+
+def normalize_schema(schema: Any) -> Optional[Tuple[ValueField, ...]]:
+    """Normalize a user schema to a sorted, hashable ``ValueField`` tuple.
+
+    Accepts ``None`` (raw i32 value mode), a mapping ``name -> spec``, or a
+    sequence of ``ValueField``/tuples. A field spec may be a dtype, a
+    ``(dtype, shape)`` pair, or anything with ``.dtype``/``.shape`` (e.g.
+    ``jax.ShapeDtypeStruct``).
+    """
+    if schema is None:
+        return None
+    fields = []
+    if isinstance(schema, Mapping):
+        items = schema.items()
+    else:
+        items = [(f[0], (f[1], tuple(f[2]) if len(f) > 2 else ()))
+                 for f in schema]
+    for name, spec in items:
+        if hasattr(spec, "dtype") and hasattr(spec, "shape"):
+            dtype, shape = spec.dtype, tuple(spec.shape)
+        elif isinstance(spec, tuple):
+            dtype, shape = spec[0], tuple(spec[1])
+        else:
+            dtype, shape = spec, ()
+        fields.append(ValueField(str(name), jnp.dtype(dtype).name, shape))
+    if not fields:
+        return None
+    out = tuple(sorted(fields))
+    names = [f.name for f in out]
+    assert len(set(names)) == len(names), f"duplicate schema fields: {names}"
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    """Everything about a table, in one declarative, hashable object.
+
+    Core sizing mirrors :class:`repro.core.table.TableConfig`; ``placement``
+    / ``backend`` / ``value_schema`` select the execution strategy. Build
+    the handle with :func:`repro.table_api.create` (or ``Table.create``).
+    """
+
+    # --- core table sizing (TableConfig mirror) --------------------------
+    dmax: int = 8
+    bucket_size: int = 8
+    pool_size: int = 256
+    n_lanes: int = 16            # lanes per combining transaction (global)
+    hash_name: str = "fmix32"
+    initial_depth: int = 0
+    max_rounds: int = 0
+    use_fast_path: bool = True
+
+    # --- placement -------------------------------------------------------
+    placement: str = "local"     # "local" | "sharded"
+    shard_bits: int = 1          # sharded: 2**shard_bits table shards
+    data_axis: str = "data"      # sharded: ops/queries sharded over this axis
+    model_axis: str = "model"    # sharded: table shards live on this axis
+
+    # --- backend ---------------------------------------------------------
+    backend: str = "auto"        # "auto" | "xla" | "pallas" | "interpret"
+
+    # --- value schema ----------------------------------------------------
+    value_schema: Optional[Tuple[ValueField, ...]] = None
+    slab_capacity: int = 0       # 0 → pool_size * bucket_size (max items)
+
+    def __post_init__(self):
+        assert self.placement in PLACEMENTS, self.placement
+        assert self.backend in BACKENDS, self.backend
+        if self.placement == "sharded":
+            assert 1 <= self.shard_bits <= 8, self.shard_bits
+        object.__setattr__(self, "value_schema",
+                           normalize_schema(self.value_schema))
+        if self.slab_capacity and self.value_schema is None:
+            raise ValueError("slab_capacity given without a value_schema")
+        # construction-time validation of the core knobs
+        self.table_config()
+
+    # --- derived views ---------------------------------------------------
+
+    @property
+    def slab_rows(self) -> int:
+        if self.value_schema is None:
+            return 0
+        return self.slab_capacity or self.pool_size * self.bucket_size
+
+    @property
+    def n_shards(self) -> int:
+        return 1 << self.shard_bits if self.placement == "sharded" else 1
+
+    def table_config(self) -> "T.TableConfig":
+        """The local-table config this spec resolves to.
+
+        For sharded placement this is the PER-SHARD config (the shard id
+        consumes the top ``shard_bits`` hash bits; every shard sees the
+        full ``n_lanes``-wide announced batch)."""
+        shift = self.shard_bits if self.placement == "sharded" else 0
+        return T.TableConfig(
+            dmax=self.dmax, bucket_size=self.bucket_size,
+            pool_size=self.pool_size, n_lanes=self.n_lanes,
+            hash_name=self.hash_name, hash_shift=shift,
+            initial_depth=self.initial_depth, max_rounds=self.max_rounds,
+            use_fast_path=self.use_fast_path)
+
+    def dist_config(self):
+        """The DistConfig for sharded placement (lazy import: dist↔spec)."""
+        from repro.core import dist as D
+        assert self.placement == "sharded"
+        return D.DistConfig(
+            shard_bits=self.shard_bits, data_axis=self.data_axis,
+            model_axis=self.model_axis,
+            local=T.TableConfig(
+                dmax=self.dmax, bucket_size=self.bucket_size,
+                pool_size=self.pool_size, n_lanes=0,
+                hash_name=self.hash_name,
+                initial_depth=self.initial_depth,
+                max_rounds=self.max_rounds,
+                use_fast_path=self.use_fast_path))
+
+    @classmethod
+    def from_config(cls, cfg: "T.TableConfig", **overrides) -> "TableSpec":
+        """Lift an existing TableConfig into a spec (migration helper)."""
+        assert cfg.hash_shift == 0, \
+            "hash_shift is owned by sharded placement; use placement='sharded'"
+        base = dict(
+            dmax=cfg.dmax, bucket_size=cfg.bucket_size,
+            pool_size=cfg.pool_size, n_lanes=cfg.n_lanes,
+            hash_name=cfg.hash_name, initial_depth=cfg.initial_depth,
+            max_rounds=cfg.max_rounds, use_fast_path=cfg.use_fast_path)
+        base.update(overrides)
+        return cls(**base)
+
+    def field_dtypes(self) -> dict:
+        assert self.value_schema is not None
+        return {f.name: jnp.dtype(f.dtype) for f in self.value_schema}

@@ -679,11 +679,55 @@ def apply_batch(cfg: TableConfig, state: TableState, ops: OpBatch):
 # convenience wrappers (announce helpers)
 
 
-def make_ops(cfg: TableConfig, state: TableState, kinds, keys, values=None):
-    """Build an OpBatch with fresh per-lane sequence numbers."""
+def _validate_ops(kinds, keys, values):
+    """Canonicalize an op batch to matching 1-d i32 arrays (or raise)."""
     kinds = jnp.asarray(kinds, jnp.int32)
     keys = jnp.asarray(keys, jnp.int32)
-    values = jnp.zeros_like(keys) if values is None else jnp.asarray(values, jnp.int32)
+    values = (jnp.zeros_like(keys) if values is None
+              else jnp.asarray(values, jnp.int32))
+    if not (kinds.ndim == 1 and kinds.shape == keys.shape == values.shape):
+        raise ValueError(
+            f"op batch must be matching 1-d arrays; got kinds "
+            f"{kinds.shape}, keys {keys.shape}, values {values.shape}")
+    return kinds, keys, values
+
+
+def pad_ops(cfg: TableConfig, kinds, keys, values=None):
+    """NOP-fill a short op batch to exactly ``cfg.n_lanes`` lanes.
+
+    Returns ``(kinds, keys, values)`` i32 arrays of length ``n_lanes``.
+    Over-length batches raise: one combining transaction is at most
+    ``n_lanes`` wide — chunk longer batches (``repro.table_api.Table``
+    does this automatically).
+    """
+    kinds, keys, values = _validate_ops(kinds, keys, values)
+    m = kinds.shape[0]
+    if m > cfg.n_lanes:
+        raise ValueError(
+            f"batch of {m} ops exceeds n_lanes={cfg.n_lanes}; chunk it "
+            "(repro.table_api.Table.apply handles any batch length)")
+    pad = cfg.n_lanes - m
+    if pad:
+        kinds = jnp.pad(kinds, (0, pad))          # NOP == 0
+        keys = jnp.pad(keys, (0, pad))
+        values = jnp.pad(values, (0, pad))
+    return kinds, keys, values
+
+
+def make_ops(cfg: TableConfig, state: TableState, kinds, keys, values=None):
+    """Build an OpBatch with fresh per-lane sequence numbers.
+
+    Shapes are validated eagerly: all inputs must be 1-d of length exactly
+    ``cfg.n_lanes`` (the announce array is statically ``n`` wide). Shorter
+    batches must go through :func:`pad_ops` first — previously a short
+    batch was only caught by accident via the ``seq`` shape mismatch.
+    """
+    kinds, keys, values = _validate_ops(kinds, keys, values)
+    if kinds.shape[0] != cfg.n_lanes:
+        raise ValueError(
+            f"op batch has {kinds.shape[0]} lanes, config has "
+            f"n_lanes={cfg.n_lanes}; NOP-fill short batches with pad_ops() "
+            "or use repro.table_api.Table for arbitrary batch lengths")
     seq = state.applied_seq + 1
     return OpBatch(kind=kinds, key=keys, value=values, seq=seq)
 
@@ -813,7 +857,18 @@ def build_table_fns(cfg: TableConfig, *, use_kernels: bool | None = None,
     hot path; elsewhere the XLA single-pass transaction is (Pallas interpret
     mode is a correctness device, not a fast path). Forcing
     ``use_kernels=True`` off-TPU selects interpret mode automatically.
+
+    .. deprecated:: PR 2
+        The stringly-typed closure dict is superseded by the typed
+        :class:`repro.table_api.Table` facade
+        (``Table.create(TableSpec.from_config(cfg))``); this shim stays for
+        one deprecation cycle.
     """
+    import warnings
+    warnings.warn(
+        "build_table_fns is deprecated; use repro.table_api.Table "
+        "(Table.create(TableSpec.from_config(cfg)))",
+        DeprecationWarning, stacklevel=2)
     from repro.kernels import ops as kops  # deferred: kernels import table
 
     if use_kernels is None:

@@ -15,18 +15,16 @@ feature integration + its correctness oracle is the dense path itself.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.spec import TableSpec
 from repro.models import layers as L
 from repro.models.model import ModelConfig
 from repro.serving import kvcache as KV
-from repro.core import table as T
-from repro.kernels import ops as kops
 
 
 class EngineState(NamedTuple):
@@ -39,12 +37,15 @@ def make_paged_config(cfg: ModelConfig, batch: int, max_len: int,
     max_blocks = -(-max_len // page_size)
     n_pages = max_blocks * batch + 8
     n_pages = -(-n_pages // 512) * 512   # divisible for page-dim sharding
-    # table sized for the worst-case live set, lanes = batch
-    tbl = dataclasses.replace(
-        KV.PagedConfig.__dataclass_fields__["table"].default_factory(),
+    # table spec sized for the worst-case live set, lanes = batch; page
+    # metadata travels through the (page, length) value schema
+    tbl = TableSpec(
         dmax=max(4, (n_pages - 1).bit_length() + 1),
+        bucket_size=8,
         pool_size=max(64, 4 * n_pages),
         n_lanes=max(batch, 16),
+        value_schema=dict(KV.PAGE_SCHEMA),
+        slab_capacity=2 * n_pages,   # live mappings ≤ n_pages (+ transient)
     )
     return KV.PagedConfig(
         n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
@@ -79,8 +80,8 @@ def serve_step(cfg: ModelConfig, pc: KV.PagedConfig, est: EngineState, params):
     st, page_cur, offset = KV.allocate_slots(pc, st)
     blocks = jnp.arange(pc.max_blocks, dtype=jnp.int32)
     keys = KV._key(st.seq_ids[:, None], blocks[None, :]).reshape(-1)
-    found, page_ids = kops.table_lookup(pc.table, st.table, keys)
-    page_ids = jnp.where(found, page_ids, 0).reshape(B, pc.max_blocks)
+    found, meta = st.table.lookup(keys)
+    page_ids = jnp.where(found, meta["page"], 0).reshape(B, pc.max_blocks)
     lengths = st.lengths   # already includes this token
 
     def layer(carry, xs):

@@ -2,14 +2,24 @@
 
 vLLM-style paging maps (sequence, block) → physical page through a table
 that grows and shrinks as sequences join/leave the batch. On GPU that table
-is host-managed; here it is **device-resident WF-Ext**: block allocation is
-a batched insert transaction (the PSim combiner), lookups during attention
-are rule-A sync-free gathers, and sequence eviction is a batched delete.
+is host-managed; here it is **device-resident WF-Ext** behind the typed
+:class:`repro.table_api.Table` facade: block allocation is a batched insert
+transaction (the PSim combiner), lookups during attention are rule-A
+sync-free gathers, and sequence eviction is a batched delete.
 The extendible directory doubles as the live-set grows — no worst-case
 preallocation of the page-index space.
 
 Key packing: key = (seq_id << BLOCK_BITS) | block_idx (int32; seq_id <
-2^(31-BLOCK_BITS)). Value = physical page id.
+2^(31-BLOCK_BITS)). The per-mapping metadata is a **value schema** — page
+id and the page's filled length travel as typed fields in the table's slab
+side store instead of being bit-packed into the i32 value word:
+
+    {"page": i32   — physical page id,
+     "length": i32 — tokens written into that page so far}
+
+``length`` is refreshed by an upsert each decode step, so the mapping is
+self-describing (consumers don't need the engine's per-slot lengths to
+know how full a page is).
 """
 from __future__ import annotations
 
@@ -21,9 +31,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import table as T
-from repro.kernels import ops as kops
+from repro.core.spec import TableSpec
+from repro.table_api import Table
 
 BLOCK_BITS = 12                      # ≤ 4096 blocks/sequence
+
+# the page-metadata value schema (see module docstring)
+PAGE_SCHEMA = (("page", "int32"), ("length", "int32"))
+
+
+def _default_table_spec() -> TableSpec:
+    return TableSpec(dmax=12, bucket_size=8, pool_size=1024, n_lanes=16,
+                     value_schema=dict(PAGE_SCHEMA))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,10 +54,14 @@ class PagedConfig:
     n_pages: int = 256               # physical pages (per layer stacked)
     max_blocks: int = 32             # max pages gathered per sequence
     batch: int = 8
-    table: T.TableConfig = dataclasses.field(
-        default_factory=lambda: T.TableConfig(
-            dmax=12, bucket_size=8, pool_size=1024, n_lanes=16))
+    table: TableSpec = dataclasses.field(default_factory=_default_table_spec)
     dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        fields = {f.name for f in (self.table.value_schema or ())}
+        assert fields >= {name for name, _ in PAGE_SCHEMA}, (
+            "the page table needs the (page, length) value schema; got "
+            f"{sorted(fields)}")
 
     @property
     def jdtype(self):
@@ -46,7 +69,7 @@ class PagedConfig:
 
 
 class PagedState(NamedTuple):
-    table: T.TableState          # (seq, block) → page
+    table: Table                 # (seq, block) → {page, length}
     pages_k: jnp.ndarray         # [L, n_pages, page, KV, hd]
     pages_v: jnp.ndarray
     page_alloc: jnp.ndarray      # i32[] watermark
@@ -64,7 +87,7 @@ def init_paged(pc: PagedConfig) -> PagedState:
     L = pc.n_layers
     shape = (L, pc.n_pages, pc.page_size, pc.n_kv_heads, pc.head_dim)
     return PagedState(
-        table=T.init_table(pc.table),
+        table=Table.create(pc.table),
         pages_k=jnp.zeros(shape, pc.jdtype),
         pages_v=jnp.zeros(shape, pc.jdtype),
         page_alloc=jnp.int32(0),
@@ -86,51 +109,50 @@ def admit(pc: PagedConfig, st: PagedState, slot_mask, new_seq_ids):
 @partial(jax.jit, static_argnames="pc", donate_argnums=1)
 def evict(pc: PagedConfig, st: PagedState, slot_mask):
     """Evict sequences: batched DELETE of their block mappings (the paper's
-    delete path) + page free-list push."""
-    n = pc.table.n_lanes
-    # delete up to max_blocks mappings per evicted slot, in block batches
+    delete path) + page free-list push. Short batches are NOP-padded by the
+    facade — no manual lane padding."""
+
     def del_block(b, carry):
-        st_t, free_pages, free_top = carry
-        keys = _key(jnp.where(slot_mask, st.seq_ids, 0), jnp.full_like(st.seq_ids, b))
+        tbl, free_pages, free_top = carry
+        keys = _key(jnp.where(slot_mask, st.seq_ids, 0),
+                    jnp.full_like(st.seq_ids, b))
         live = slot_mask & (b * pc.page_size < st.lengths) & (st.seq_ids >= 0)
         # look up the page first (to free it), then delete the mapping
-        found, page = kops.table_lookup(pc.table, st_t, keys)
+        found, meta = tbl.lookup(keys)
         do = live & found
         kinds = jnp.where(do, T.DEL, T.NOP).astype(jnp.int32)
-        pad = n - kinds.shape[0]
-        ops = T.make_ops(pc.table, st_t,
-                         jnp.pad(kinds, (0, pad)),
-                         jnp.pad(keys, (0, pad)),
-                         jnp.pad(jnp.zeros_like(keys), (0, pad)))
-        st_t, _ = kops.table_apply(pc.table, st_t, ops)
+        tbl, _ = tbl.apply(kinds, keys)
         # push freed pages
+        page = meta["page"]
         pos = jnp.where(do, free_top + jnp.cumsum(do) - 1, pc.n_pages)
         free_pages = free_pages.at[jnp.clip(pos, 0, pc.n_pages - 1)].set(
             jnp.where(do, page, free_pages[jnp.clip(pos, 0, pc.n_pages - 1)]))
         free_top = free_top + do.sum()
-        return st_t, free_pages, free_top
+        return tbl, free_pages, free_top
 
-    st_t, free_pages, free_top = jax.lax.fori_loop(
+    tbl, free_pages, free_top = jax.lax.fori_loop(
         0, pc.max_blocks, del_block,
         (st.table, st.free_pages, st.free_top))
     return st._replace(
-        table=st_t, free_pages=free_pages, free_top=free_top,
+        table=tbl, free_pages=free_pages, free_top=free_top,
         seq_ids=jnp.where(slot_mask, -1, st.seq_ids),
         lengths=jnp.where(slot_mask, 0, st.lengths))
 
 
-def allocate_slots(pc: PagedConfig, st: PagedState):
-    """One combining transaction per decode step: allocate pages for slots
-    crossing a block boundary (batched WF-Ext INSERT — the paper's n-thread
-    announce), then resolve every slot's current (page, offset) via rule-A
-    lookups. Returns (st', page [B], offset [B])."""
-    B = pc.batch
+def _step_transaction(pc: PagedConfig, st: PagedState):
+    """The decode step's single table transaction.
+
+    Allocates physical pages for slots crossing a block boundary and
+    upserts every active slot's mapping with fresh {page, length} metadata
+    (one combining transaction — the paper's n-thread announce). Returns
+    (table', page [B], offset [B], page_alloc', free_top', lengths')."""
     active = st.seq_ids >= 0
     pos = st.lengths
     block = pos // pc.page_size
     offset = pos % pc.page_size
     need_page = active & (offset == 0)
 
+    # physical page allocation: free stack first, then the watermark
     take_rank = jnp.cumsum(need_page) - 1
     from_stack = take_rank < st.free_top
     sidx = jnp.clip(st.free_top - 1 - take_rank, 0, pc.n_pages - 1)
@@ -139,22 +161,28 @@ def allocate_slots(pc: PagedConfig, st: PagedState):
     pop = jnp.minimum(need_page.sum(), st.free_top)
     grow = need_page.sum() - pop
 
+    # rule-A pre-read of the current mapping (mid-block slots keep their
+    # page; boundary slots take the fresh allocation)
     keys = _key(st.seq_ids, block)
-    n = pc.table.n_lanes
-    pad = n - B
-    kinds = jnp.where(need_page, T.INS, T.NOP).astype(jnp.int32)
-    ops = T.make_ops(pc.table, st.table,
-                     jnp.pad(kinds, (0, pad)),
-                     jnp.pad(keys, (0, pad)),
-                     jnp.pad(new_page, (0, pad)))
-    table, _res = kops.table_apply(pc.table, st.table, ops)
-
-    found, page = kops.table_lookup(pc.table, table, keys)
-    page = jnp.where(need_page, new_page, page)
+    _, meta = st.table.lookup(keys)
+    page = jnp.where(need_page, new_page, meta["page"])
     page = jnp.where(active, page, 0)
-    st = st._replace(table=table, page_alloc=st.page_alloc + grow,
-                     free_top=st.free_top - pop,
-                     lengths=jnp.where(active, pos + 1, pos))
+
+    kinds = jnp.where(active, T.INS, T.NOP).astype(jnp.int32)
+    table, _res = st.table.apply(
+        kinds, keys, {"page": page, "length": offset + 1})
+    return (table, page, offset, st.page_alloc + grow, st.free_top - pop,
+            jnp.where(active, pos + 1, pos))
+
+
+def allocate_slots(pc: PagedConfig, st: PagedState):
+    """One combining transaction per decode step (see _step_transaction),
+    resolving every slot's current (page, offset). Returns (st', page [B],
+    offset [B])."""
+    table, page, offset, page_alloc, free_top, lengths = \
+        _step_transaction(pc, st)
+    st = st._replace(table=table, page_alloc=page_alloc, free_top=free_top,
+                     lengths=lengths)
     return st, page, offset
 
 
@@ -165,37 +193,8 @@ def append_token(pc: PagedConfig, st: PagedState, k_new, v_new):
     for all slots in one batched announce — the paper's n-thread case)."""
     B = pc.batch
     active = st.seq_ids >= 0
-    pos = st.lengths
-    block = pos // pc.page_size
-    offset = pos % pc.page_size
-    need_page = active & (offset == 0)
-
-    # allocate physical pages for slots starting a fresh block
-    take_rank = jnp.cumsum(need_page) - 1
-    from_stack = take_rank < st.free_top
-    sidx = jnp.clip(st.free_top - 1 - take_rank, 0, pc.n_pages - 1)
-    new_page = jnp.where(from_stack, st.free_pages[sidx],
-                         st.page_alloc + take_rank - st.free_top)
-    pop = jnp.minimum(need_page.sum(), st.free_top)
-    grow = need_page.sum() - pop
-    page_alloc = st.page_alloc + grow
-    free_top = st.free_top - pop
-
-    # announce the new mappings: batched INSERT (seq, block) → page
-    keys = _key(st.seq_ids, block)
-    n = pc.table.n_lanes
-    pad = n - B
-    kinds = jnp.where(need_page, T.INS, T.NOP).astype(jnp.int32)
-    ops = T.make_ops(pc.table, st.table,
-                     jnp.pad(kinds, (0, pad)),
-                     jnp.pad(keys, (0, pad)),
-                     jnp.pad(new_page, (0, pad)))
-    table, _res = kops.table_apply(pc.table, st.table, ops)
-
-    # rule-A lookup of the destination page for every slot
-    found, page = kops.table_lookup(pc.table, table, keys)
-    page = jnp.where(need_page, new_page, page)
-    page = jnp.where(active, page, 0)
+    table, page, offset, page_alloc, free_top, lengths = \
+        _step_transaction(pc, st)
 
     # scatter K/V into pages: k_new [L, B, KV, hd]
     Lx = pc.n_layers
@@ -209,18 +208,27 @@ def append_token(pc: PagedConfig, st: PagedState, k_new, v_new):
 
     return st._replace(table=table, pages_k=pages_k, pages_v=pages_v,
                        page_alloc=page_alloc, free_top=free_top,
-                       lengths=jnp.where(active, pos + 1, pos))
+                       lengths=lengths)
 
 
 @partial(jax.jit, static_argnames="pc")
 def gather_kv(pc: PagedConfig, st: PagedState):
     """Materialize each slot's K/V view [L, B, max_blocks*page, KV, hd] via
-    rule-A lookups (zero synchronization with concurrent allocation)."""
+    rule-A lookups (zero synchronization with concurrent allocation).
+
+    The returned per-slot lengths are derived from the mappings' ``length``
+    metadata, not from engine state: each block contributes
+    ``block*page_size + length`` and the max over a slot's blocks is its
+    token count — the page table alone fully describes the cache."""
     B = pc.batch
     blocks = jnp.arange(pc.max_blocks, dtype=jnp.int32)
     keys = _key(st.seq_ids[:, None], blocks[None, :]).reshape(-1)
-    found, page = kops.table_lookup(pc.table, st.table, keys)
-    page = jnp.where(found, page, 0).reshape(B, pc.max_blocks)
+    found, meta = st.table.lookup(keys)
+    page = jnp.where(found, meta["page"], 0).reshape(B, pc.max_blocks)
+    fnd = found.reshape(B, pc.max_blocks)
+    filled = meta["length"].reshape(B, pc.max_blocks)
+    lengths = jnp.where(fnd, blocks[None, :] * pc.page_size + filled,
+                        0).max(axis=1).astype(jnp.int32)
     # [L, B, blocks, page, KV, hd]
     k = st.pages_k[:, page]
     v = st.pages_v[:, page]
@@ -228,4 +236,4 @@ def gather_kv(pc: PagedConfig, st: PagedState):
     S = pc.max_blocks * pc.page_size
     k = k.reshape(Lx, B, S, pc.n_kv_heads, pc.head_dim)
     v = v.reshape(Lx, B, S, pc.n_kv_heads, pc.head_dim)
-    return k, v, st.lengths
+    return k, v, lengths

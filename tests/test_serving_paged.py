@@ -17,7 +17,6 @@ from repro.models.model import decode_step, init_cache, init_params
 from repro.serving import kvcache as KV
 from repro.serving.engine import (EngineState, init_engine, make_paged_config,
                                   serve_step)
-from repro.core import table as T
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -57,10 +56,10 @@ def test_paged_decode_matches_dense():
         nxt = jnp.argmax(logits_dense[:, 0], -1).astype(jnp.int32)
         est = EngineState(paged=est2.paged, tokens=nxt)
         tok = nxt
-        assert not bool(est.paged.table.error)
+        assert not bool(est.paged.table.state.error)
     # pages were actually allocated through the table
     assert int(est.paged.page_alloc) >= pc.batch * (20 // pc.page_size)
-    assert int(T.table_size(est.paged.table)) == int(
+    assert int(est.paged.table.size()) == int(
         (np.ceil(20 / pc.page_size)) * pc.batch)
 
 
@@ -72,15 +71,19 @@ def test_eviction_frees_pages_and_mappings():
     est = EngineState(paged=st, tokens=jnp.ones(B, jnp.int32))
     for _ in range(9):
         est, _ = serve_step(cfg, pc, est, params)
-    mappings_before = int(T.table_size(est.paged.table))
+    mappings_before = int(est.paged.table.size())
     assert mappings_before == 3 * B  # ceil(9/4) pages per sequence
+    # the page table is self-describing: per-slot lengths derived from the
+    # mappings' (page, length) schema equal the engine's length counters
+    _, _, glens = KV.gather_kv(pc, est.paged)
+    assert (np.asarray(glens) == np.asarray(est.paged.lengths)).all()
 
     # evict half the slots
     mask = jnp.asarray([True, False, True, False])
     st = KV.evict(pc, est.paged, mask)
-    assert int(T.table_size(st.table)) == 3 * (B // 2)
+    assert int(st.table.size()) == 3 * (B // 2)
     assert int(st.free_top) == 3 * (B // 2)          # pages recycled
-    assert not bool(st.table.error)
+    assert not bool(st.table.state.error)
     # re-admit into the freed slots and keep decoding; freed pages reused
     st = KV.admit(pc, st, mask, jnp.asarray([10, 0, 11, 0], jnp.int32))
     est = EngineState(paged=st, tokens=jnp.ones(B, jnp.int32))
@@ -88,7 +91,7 @@ def test_eviction_frees_pages_and_mappings():
     for _ in range(4):
         est, _ = serve_step(cfg, pc, est, params)
     assert int(est.paged.page_alloc) == alloc_before  # served from free list
-    assert not bool(est.paged.table.error)
+    assert not bool(est.paged.table.state.error)
 
 
 def test_page_table_directory_grows_with_live_set():
@@ -99,8 +102,8 @@ def test_page_table_directory_grows_with_live_set():
     st = KV.admit(pc, est.paged, jnp.ones(B, bool),
                   jnp.arange(1, B + 1, dtype=jnp.int32))
     est = EngineState(paged=st, tokens=jnp.ones(B, jnp.int32))
-    d0 = int(est.paged.table.depth)
+    d0 = int(est.paged.table.state.depth)
     for _ in range(40):  # 10 pages per sequence, 80 mappings
         est, _ = serve_step(cfg, pc, est, params)
-    assert int(est.paged.table.depth) > d0
-    assert not bool(est.paged.table.error)
+    assert int(est.paged.table.state.depth) > d0
+    assert not bool(est.paged.table.state.error)
