@@ -1,0 +1,135 @@
+"""Scenario-sweep churn benchmark: resize-heavy curves, policy on vs off.
+
+The paper's fig-10/11 measure resize cost on synthetic growth runs; this
+benchmark widens that axis to the full scenario registry (uniform / zipf /
+phased_drain / mixed_churn) and adds the dimension the paper could not:
+the elastic ``ResizePolicy``. Every scenario runs twice — policy on and
+off — through the replay harness in benchmark mode (no oracle, no per-step
+sync), recording per-phase throughput, the depth trajectory, and the
+policy's split/merge counts.
+
+Output is ``BENCH_churn.json``::
+
+    {"rows": {"phased_drain/policy": {"kops": ..., "phases": [...],
+                                      "depth_max": ..., "splits": ...},
+              "phased_drain/reactive": {...}, ...}}
+
+CI uploads it as an artifact next to the replay parity reports, so every
+merge leaves a measured churn curve behind.
+
+``--replay-reports DIR`` additionally replays every scenario in *checked*
+mode (full differential oracle) and writes one ``replay_<scenario>.json``
+report per scenario into DIR — the parity evidence CI archives.
+
+Usage:
+  python -m benchmarks.churn                     # all scenarios, local
+  python -m benchmarks.churn --scenarios mixed_churn --scale 2 --repeats 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def run_scenario(name: str, policy: bool, scale: float, seed: int) -> dict:
+    from repro.workloads import get_scenario
+    from repro.workloads.replay import replay
+
+    spec, trace = get_scenario(name, policy=policy, scale=scale, seed=seed)
+    report = replay(spec, trace, check=False, depth_every=4)
+    total_ops = sum(p["ops"] for p in report["phases"])
+    total_s = sum(p["seconds"] for p in report["phases"])
+    stats = report["policy"] or {"splits": 0, "merges": 0}
+    return {
+        "kops": round(total_ops / total_s / 1e3, 3) if total_s else 0.0,
+        "ops": total_ops,
+        "seconds": round(total_s, 3),
+        "depth_max": report["depth"]["max"],
+        "depth_final": report["depth"]["final"],
+        "depth_increases": report["depth"]["increases"],
+        "depth_decreases": report["depth"]["decreases"],
+        "splits": stats["splits"],
+        "merges": stats["merges"],
+        "error_flag": report["error_flag"],
+        "phases": report["phases"],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenarios", default="", help="comma list (default: all)")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=1, help="keep best Kops")
+    ap.add_argument("--out", default="BENCH_churn.json")
+    ap.add_argument(
+        "--replay-reports",
+        default="",
+        metavar="DIR",
+        help="also run each scenario in checked (oracle) mode, writing "
+        "replay_<scenario>.json parity reports into DIR; exits nonzero "
+        "on any differential mismatch",
+    )
+    args = ap.parse_args()
+
+    from repro.workloads import SCENARIOS
+
+    names = (
+        [s.strip() for s in args.scenarios.split(",") if s.strip()]
+        if args.scenarios
+        else list(SCENARIOS)
+    )
+    rows: dict = {}
+    for name in names:
+        for policy in (True, False):
+            row_name = f"{name}/{'policy' if policy else 'reactive'}"
+            best: dict = {}
+            for _ in range(max(1, args.repeats)):
+                rec = run_scenario(name, policy, args.scale, args.seed)
+                if not best or rec["kops"] > best["kops"]:
+                    best = rec
+            rows[row_name] = best
+            print(
+                f"{row_name},{best['kops']:.3f}Kops,"
+                f"depth{best['depth_max']}->{best['depth_final']},"
+                f"splits={best['splits']},merges={best['merges']}",
+                flush=True,
+            )
+
+    with open(args.out, "w") as f:
+        json.dump({"scale": args.scale, "rows": rows}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[churn] wrote {len(rows)} rows to {args.out}")
+
+    if args.replay_reports:
+        from repro.workloads import get_scenario
+        from repro.workloads.replay import replay
+
+        os.makedirs(args.replay_reports, exist_ok=True)
+        bad = []
+        for name in names:
+            spec, trace = get_scenario(name, seed=args.seed)
+            rep = replay(spec, trace, raise_on_mismatch=False)
+            path = os.path.join(args.replay_reports, f"replay_{name}.json")
+            with open(path, "w") as f:
+                json.dump(rep, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(
+                f"[churn] replay {name}: ok={rep['ok']} "
+                f"status_mismatches={rep['status_mismatches']} "
+                f"content_mismatches={rep['content_mismatches']} -> {path}",
+                flush=True,
+            )
+            if not rep["ok"]:
+                bad.append(name)
+        if bad:
+            print(f"[churn] PARITY FAILURES: {bad}", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

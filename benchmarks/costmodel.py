@@ -74,7 +74,6 @@ def collective_bytes_scaled(hlo: str, plausible_trips=(1,)):
     plausible = set(t for t in plausible_trips if t and t > 1)
 
     # find while ops: which block they live in, their body, trip estimate
-    body_mult = defaultdict(lambda: 1)
     parents = {}
     trips = {}
     for name, lines in blocks.items():

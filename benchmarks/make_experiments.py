@@ -6,7 +6,6 @@ Usage: PYTHONPATH=src python benchmarks/make_experiments.py \
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
 from benchmarks.roofline import dryrun_table, fmt_bytes, load, roofline_table

@@ -17,7 +17,7 @@ relative orderings:
 from __future__ import annotations
 
 import time
-from functools import lru_cache, partial
+from functools import partial
 
 import jax
 import jax.numpy as jnp

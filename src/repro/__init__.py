@@ -15,8 +15,8 @@ which entry points that must set ``XLA_FLAGS`` first rely on.
 """
 
 _FACADE_EXPORTS = (
-    "Table", "TableSpec", "ValueField", "BatchResult", "create",
-    "NOP", "INS", "DEL",
+    "Table", "TableSpec", "ValueField", "ResizePolicy", "BatchResult",
+    "create", "NOP", "INS", "DEL",
 )
 
 __all__ = list(_FACADE_EXPORTS)

@@ -25,8 +25,9 @@ _TABLE_EXPORTS = (
     "freeze_buddies", "merge_buddies", "build_table_fns",
 )
 _SPEC_EXPORTS = ("TableSpec", "ValueField", "normalize_schema")
+_POLICY_EXPORTS = ("ResizePolicy", "apply_policy")
 
-__all__ = list(_TABLE_EXPORTS + _SPEC_EXPORTS)
+__all__ = list(_TABLE_EXPORTS + _SPEC_EXPORTS + _POLICY_EXPORTS)
 
 
 def __getattr__(name):
@@ -36,6 +37,9 @@ def __getattr__(name):
     if name in _SPEC_EXPORTS:
         from repro.core import spec
         return getattr(spec, name)
+    if name in _POLICY_EXPORTS:
+        from repro.core import policy
+        return getattr(policy, name)
     raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
 
 

@@ -145,7 +145,6 @@ def split_update(cfg: SplitConfig, st: SplitState, kinds, keys, values):
     so = _split_sokey(cfg, keys)
     h = cfg.hash_fn(keys)
     start = st.buckets[dir_index(h, cfg.depth)]
-    lane = jnp.arange(n, dtype=jnp.int32)
 
     def round_body(carry):
         r, st, pending, status = carry
@@ -156,10 +155,8 @@ def split_update(cfg: SplitConfig, st: SplitState, kinds, keys, values):
         pred, curr = jax.vmap(one, in_axes=(0, 0))(start, so)
         at = jnp.maximum(curr, 0)
         exist = (curr >= 0) & (st.sokey[at] == so) & (st.key[at] == keys)
-        # winner per predecessor: lowest pending lane (CAS winner)
-        pkey = jnp.where(pending, pred, jnp.int32(cfg.max_nodes))
-        first = jnp.zeros(cfg.max_nodes + 1, jnp.int32).at[pkey].min(
-            lane, mode="drop")
+        # winner per predecessor: first pending lane in stable order (the
+        # CAS winner) — losers retry next round
         order = jnp.argsort(jnp.where(pending, pred, cfg.max_nodes), stable=True)
         sortp = jnp.where(pending, pred, cfg.max_nodes)[order]
         is_first = jnp.concatenate([jnp.ones(1, bool), sortp[1:] != sortp[:-1]])
@@ -286,7 +283,6 @@ def freeze_update(cfg: FreezeConfig, st: FreezeState, kinds, keys, values):
     P, B = cfg.pool_size, cfg.bucket_size
     h = cfg.hash_fn(keys)
     e = dir_index(h, cfg.depth)
-    lane = jnp.arange(n, dtype=jnp.int32)
 
     def round_body(carry):
         r, st, pending, status = carry
@@ -399,7 +395,6 @@ def lock_step(cfg: LockConfig, st: LockState, kinds, keys, values):
     """All ops — lookups included — serialize through their bucket's lock:
     a sequential scan over the batch (one lock-holder at a time per bucket,
     modeled as a strict sequential fold, the worst legal schedule)."""
-    B = cfg.bucket_size
     h = cfg.hash_fn(keys)
     b = dir_index(h, cfg.depth)
 

@@ -21,8 +21,6 @@ extendible directory's locality argument, now across the network).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -92,6 +92,11 @@ def check_invariants(cfg: TableConfig, state: TableState,
         "incremental counts out of sync with pool occupancy"
     assert counts[P] == 0, "trash-row count nonzero"
 
+    # 5b. policy action counters: monotone non-negative (splits, merges)
+    pc = np.asarray(state.policy_counts)
+    assert pc.shape == (2,) and (pc >= 0).all(), \
+        f"policy_counts malformed: {pc}"
+
     # 6. allocator consistency: live ∩ free = ∅, live ∪ free ⊆ [0, nalloc)
     free = np.asarray(state.free_stack)[: int(state.free_top)]
     live_ids = np.nonzero(live[:P])[0]

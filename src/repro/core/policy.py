@@ -1,0 +1,205 @@
+"""Elastic resize policy: watermark-driven proactive splits & buddy merges.
+
+The paper's resize actions are purely *reactive*: a bucket splits only when
+an update finds it full (the FAIL → ResizeWF path), and the §4.5 merge path
+(`freeze_buddies` / `merge_buddies`) is a mechanism with no driver — nothing
+in the seed ever shrinks the directory. :class:`ResizePolicy` closes that
+loop. After every combining transaction the policy runs two bounded,
+vectorized maintenance passes over the incremental occupancy counts
+(``TableState.counts`` — no recounting):
+
+* **split pass** — buckets at or above the high watermark
+  (``ceil(split_watermark * bucket_size)`` items) are split *before* they
+  overflow, so the hot path keeps hitting the single-pass fast case instead
+  of the slow split rounds. At most ``max_splits`` per transaction (a
+  static bound: the policy inherits the table's wait-freedom argument).
+* **merge pass** — buddy pairs whose combined occupancy is at or below the
+  low watermark (``floor(merge_watermark * bucket_size)`` items) are merged
+  back into their parent through the §4.5 freeze → merge → unfreeze
+  transaction, deepest pair first (coldest within a depth), at most
+  ``max_merges`` per transaction.
+
+**Hysteresis.** ``merge_watermark < split_watermark`` makes the two
+thresholds a hysteresis band: a freshly split parent carried at least
+``ceil(hi·B)`` items, so its children's combined occupancy strictly exceeds
+``floor(lo·B)`` and they cannot immediately re-merge; a freshly merged
+parent holds at most ``floor(lo·B) < ceil(hi·B)`` items and cannot
+immediately re-split. Oscillating workloads must therefore cross the whole
+band — ``ceil(hi·B) - floor(lo·B)`` real insertions or deletions — between
+consecutive resize actions on the same region, which bounds resize work per
+op by the band width (tests/test_policy.py asserts this no-thrash bound).
+
+The policy is **content-transparent**: it changes only the bucket layout,
+never the key→value map or any op's status, so every differential check
+against the sequential reference oracle is unaffected (the workload replay
+harness in :mod:`repro.workloads.replay` verifies exactly this). Both
+passes are jit-compatible with static shapes and run unchanged inside the
+sharded placement's ``shard_map`` body — each shard maintains its own
+region of the key space, which is the extendible directory's locality
+argument doing the work.
+
+Cumulative actions are recorded in ``TableState.policy_counts`` (i32[2]:
+splits, merges) so callers can *observe* elasticity — the workload tests
+assert that churn scenarios really exercised both directions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import table as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizePolicy:
+    """Watermark policy knobs (frozen + hashable: legal jit static data).
+
+    ``split_watermark`` / ``merge_watermark`` are occupancy fractions of
+    ``bucket_size``; ``max_splits`` / ``max_merges`` are per-transaction
+    action budgets (static shapes — the wait-freedom bound); ``min_depth``
+    floors the directory depth a merge may shrink to (a table configured
+    with ``initial_depth`` typically pins ``min_depth`` to it so the
+    steady-state layout never collapses below its provisioned floor).
+    """
+
+    split_watermark: float = 0.875   # split when count >= ceil(hi * B)
+    merge_watermark: float = 0.25    # merge when combined <= floor(lo * B)
+    max_splits: int = 8
+    max_merges: int = 2
+    min_depth: int = 0
+
+    def __post_init__(self):
+        assert 0.0 < self.merge_watermark < self.split_watermark <= 1.0, (
+            "need 0 < merge_watermark < split_watermark <= 1 (hysteresis)",
+            self.merge_watermark, self.split_watermark)
+        assert self.max_splits >= 0 and self.max_merges >= 0
+        assert self.min_depth >= 0
+
+    def thresholds(self, bucket_size: int) -> tuple[int, int]:
+        """(hi, lo) item thresholds for a given bucket size: split at
+        count >= hi, merge at combined <= lo. Python ints (static)."""
+        hi = math.ceil(self.split_watermark * bucket_size)
+        lo = math.floor(self.merge_watermark * bucket_size)
+        return hi, lo
+
+    def validate(self, bucket_size: int, dmax: int) -> None:
+        """B-dependent checks (done by TableSpec at construction)."""
+        hi, lo = self.thresholds(bucket_size)
+        assert lo < hi, (
+            f"degenerate hysteresis band for bucket_size={bucket_size}: "
+            f"merge threshold {lo} must sit strictly below split "
+            f"threshold {hi}")
+        assert hi >= 2, (
+            f"split_watermark={self.split_watermark} splits near-empty "
+            f"buckets at bucket_size={bucket_size}")
+        assert self.min_depth <= dmax
+
+
+def _policy_split(cfg: T.TableConfig, policy: ResizePolicy, st: T.TableState):
+    """Proactively split up to ``max_splits`` hottest-id buckets at or above
+    the high watermark. Skips silently (no error flag) when the pool or the
+    hash bits are exhausted — proactive work is an optimization, never an
+    obligation."""
+    P = cfg.pool_size
+    hi, _ = policy.thresholds(cfg.bucket_size)
+    hot = (st.live & ~st.frozen & (st.counts >= hi)
+           & (st.bdepth < cfg.dmax))
+    hot = hot.at[P].set(False)
+    iota = jnp.arange(P + 1, dtype=jnp.int32)
+    split_ids = jnp.sort(jnp.where(hot, iota, jnp.int32(P)))
+    split_ids = split_ids[:policy.max_splits]
+    valid = split_ids < P
+    # never exhaust the pool from the proactive path: each split consumes a
+    # net one bucket row (2 children alloc'd, 1 parent freed *afterwards*,
+    # so peak demand is 2 rows per split from the current free pool)
+    avail_pairs = (st.free_top + (jnp.int32(P) - st.nalloc)) // 2
+    valid = valid & (jnp.cumsum(valid.astype(jnp.int32)) <= avail_pairs)
+    st, k = T._do_splits(cfg, st, split_ids, valid)
+    return st._replace(policy_counts=st.policy_counts.at[0].add(k))
+
+
+def _merge_candidate(cfg: T.TableConfig, policy: ResizePolicy,
+                     st: T.TableState):
+    """(parent_prefix, parent_depth, ok) of the best mergeable buddy pair,
+    scanning even-prefix buckets and resolving buddies through the
+    directory (O(pool) elementwise work on the incremental counts).
+
+    Priority is deepest-then-coldest — the exact inverse of split order:
+    clearing the deepest level first is what actually shrinks the logical
+    directory depth (merging shallow cold pairs only reduces the bucket
+    count), so drains become *observable* as depth decreases."""
+    P, B = cfg.pool_size, cfg.bucket_size
+    _, lo = policy.thresholds(B)
+    is_left = (st.live & (st.bdepth > policy.min_depth)
+               & (st.bprefix % 2 == 0))
+    is_left = is_left.at[P].set(False)
+    d = st.bdepth
+    # the buddy owns the adjacent prefix range: entry of prefix|1 at depth d
+    shift = jnp.maximum(cfg.dmax - d, 0)
+    e1 = jnp.clip((st.bprefix | 1) << shift, 0, cfg.dcap - 1)
+    buddy = st.directory[e1]
+    combined = st.counts + st.counts[buddy]
+    ok = (is_left
+          & (buddy != jnp.arange(P + 1, dtype=jnp.int32))
+          & (st.bdepth[buddy] == d)
+          & ~st.frozen & ~st.frozen[buddy]
+          & (st.counts < B) & (st.counts[buddy] < B)
+          & (combined <= lo))
+    # merge_buddies allocates the parent before freeing the children: skip
+    # when the allocator has no row to hand out (never flag error from here)
+    ok = ok & ((st.free_top > 0) | (st.nalloc < P))
+    stride = jnp.int32(2 * B + 2)
+    big = jnp.int32(cfg.dmax + 1) * stride
+    score = jnp.where(ok, (jnp.int32(cfg.dmax) - d) * stride + combined, big)
+    b = jnp.argmin(score)
+    return st.bprefix[b] >> 1, st.bdepth[b] - 1, score[b] < big
+
+
+def _policy_merge(cfg: T.TableConfig, policy: ResizePolicy, st: T.TableState):
+    """Merge up to ``max_merges`` coldest buddy pairs (freeze → merge →
+    unfreeze, atomically within the transaction — no FROZEN status ever
+    escapes to a caller from policy-driven merges)."""
+    for _ in range(policy.max_merges):
+        prefix, depth, ok = _merge_candidate(cfg, policy, st)
+
+        def do_merge(st, prefix=prefix, depth=depth):
+            st2, merged = T.merge_buddies(cfg, st, prefix, depth)
+            return st2._replace(
+                policy_counts=st2.policy_counts.at[1].add(
+                    merged.astype(jnp.int32)))
+
+        st = jax.lax.cond(ok, do_merge, lambda st: st, st)
+    return st
+
+
+def apply_policy(cfg: T.TableConfig, policy: ResizePolicy,
+                 st: T.TableState) -> T.TableState:
+    """One bounded maintenance round: proactive splits, then buddy merges.
+
+    Runs after a combining transaction (the facade composes it into the
+    per-placement ``apply_fn``); hysteresis guarantees the two passes never
+    undo each other within a round (a fresh child pair sits above the merge
+    threshold, a fresh parent below the split threshold).
+    """
+    if policy.max_splits > 0:
+        st = _policy_split(cfg, policy, st)
+    if policy.max_merges > 0:
+        st = _policy_merge(cfg, policy, st)
+    return st
+
+
+def wrap_apply_fn(policy: ResizePolicy, apply_fn):
+    """Compose ``apply_policy`` onto a per-placement combining transaction
+    ``apply_fn(cfg, state, ops) -> (state, result)`` (the facade's single
+    wiring point — works identically for the local path and inside the
+    sharded placement's shard_map body, where ``cfg`` arrives as the
+    per-shard local config)."""
+
+    def apply_with_policy(lcfg, state, ops):
+        state, res = apply_fn(lcfg, state, ops)
+        return apply_policy(lcfg, policy, state), res
+
+    return apply_with_policy

@@ -13,9 +13,8 @@ genuine linearizability test.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-import numpy as np
 
 HASH_BITS = 32
 EMPTY = None

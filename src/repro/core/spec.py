@@ -34,6 +34,7 @@ from typing import Any, Mapping, NamedTuple, Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core import table as T
+from repro.core.policy import ResizePolicy
 
 PLACEMENTS = ("local", "sharded")
 BACKENDS = ("auto", "xla", "pallas", "interpret")
@@ -111,11 +112,20 @@ class TableSpec:
     value_schema: Optional[Tuple[ValueField, ...]] = None
     slab_capacity: int = 0       # 0 → pool_size * bucket_size (max items)
 
+    # --- elastic resize policy (core/policy.py; None = paper-reactive) ----
+    resize_policy: Optional[ResizePolicy] = None
+
     def __post_init__(self):
         assert self.placement in PLACEMENTS, self.placement
         assert self.backend in BACKENDS, self.backend
         if self.placement == "sharded":
             assert 1 <= self.shard_bits <= 8, self.shard_bits
+        if self.resize_policy is not None:
+            assert isinstance(self.resize_policy, ResizePolicy), \
+                type(self.resize_policy)
+            # B-dependent hysteresis validation happens here (the policy
+            # alone cannot see bucket_size)
+            self.resize_policy.validate(self.bucket_size, self.dmax)
         object.__setattr__(self, "value_schema",
                            normalize_schema(self.value_schema))
         if self.slab_capacity and self.value_schema is None:

@@ -113,6 +113,12 @@ class TableState(NamedTuple):
     counts: jnp.ndarray      # i32[P+1]    incremental per-bucket occupancy
                              #             (insert/delete/split/merge keep it
                              #             in sync; row P stays 0)
+    policy_counts: jnp.ndarray  # i32[2]   cumulative (auto-splits,
+                                #          auto-merges) performed by the
+                                #          elastic ResizePolicy (policy.py);
+                                #          reactive overflow splits are NOT
+                                #          counted — this is the policy's
+                                #          own observability channel
 
 
 class OpBatch(NamedTuple):
@@ -155,6 +161,7 @@ def init_table(cfg: TableConfig) -> TableState:
         last_status=jnp.zeros(n, jnp.int8),
         error=jnp.asarray(False),
         counts=jnp.zeros(P + 1, jnp.int32),
+        policy_counts=jnp.zeros(2, jnp.int32),
     )
 
 
@@ -446,7 +453,6 @@ def _wave_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
         sel = pending & (rank == w)
         row = jnp.where(sel, bucket, jnp.int32(P))       # trash row if idle
         rows_k = keys[row]                               # [n, B]
-        rows_v = vals[row]
         occ = rows_k != EMPTY_KEY
         cnt = occ.sum(axis=-1)
         frozen = st.frozen[row]
@@ -460,7 +466,6 @@ def _wave_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
         # paper ExecOnBucket: the full test comes FIRST — no update (not
         # even Delete) runs on a full bucket; frozen likewise blocks.
         frozen_hit = sel & frozen
-        blocked = sel & full & ~frozen
         apply_ = sel & ~full & ~frozen
 
         write_slot = jnp.where(is_ins, jnp.where(exist, slot_eq, slot_free), slot_eq)
@@ -495,11 +500,10 @@ def _wave_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
                        applied_seq=applied_seq), pending, status
 
 
-def _alloc_pairs(cfg: TableConfig, st: TableState, k):
+def _alloc_pairs(cfg: TableConfig, st: TableState, k, k_max: int):
     """Allocate 2*k bucket ids: pop the free stack first (local-heap reuse,
-    paper §5), then advance the watermark. Returns (ids[2*MS], st)."""
-    MS = cfg.n_lanes
-    j = jnp.arange(2 * MS, dtype=jnp.int32)
+    paper §5), then advance the watermark. Returns (ids[2*k_max], st)."""
+    j = jnp.arange(2 * k_max, dtype=jnp.int32)
     from_stack = j < st.free_top
     stack_idx = jnp.clip(st.free_top - 1 - j, 0, cfg.pool_size)
     ids = jnp.where(from_stack, st.free_stack[stack_idx], st.nalloc + j - st.free_top)
@@ -514,43 +518,30 @@ def _alloc_pairs(cfg: TableConfig, st: TableState, k):
     )
 
 
-def _split_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
-    """SplitBucket + DirectoryUpdate + ApplyPendingResize's re-routing.
+def _do_splits(cfg: TableConfig, st: TableState, split_ids, valid):
+    """SplitBucket + DirectoryUpdate for up to ``k_max`` buckets at once.
 
-    Every full bucket targeted by a still-pending op is split once; pending
-    ops re-route through the updated directory on the next round. At most
-    n buckets can need splitting (each requires a pending op), so the pass
-    is statically sized at n splits.
+    ``split_ids`` is i32[k_max] naming the parents (masked entries must be
+    the trash row, enforced here via ``valid``); the pass allocates child
+    pairs, redistributes items by the (depth+1)-th hash bit, retires the
+    parents onto the free stack, and rewrites the directory in one
+    vectorized sweep. Shared by the reactive overflow path
+    (:func:`_split_pass`) and the proactive watermark policy
+    (:mod:`repro.core.policy`). Returns ``(state, k_split)``.
     """
-    P, B, n = cfg.pool_size, cfg.bucket_size, cfg.n_lanes
-    _, bucket = _route(cfg, st.directory, ops.key)
-
-    needs = jnp.zeros(P + 1, bool).at[jnp.where(pending, bucket, P)].set(True)
-    needs = needs & st.live & ~st.frozen & (st.counts == B)
-    needs = needs.at[P].set(False)
-    # a bucket already at dmax cannot split: the hash bits are exhausted —
-    # same failure mode as the paper running out of key bits.
-    stuck = needs & (st.bdepth >= cfg.dmax)
-    splittable = needs & (st.bdepth < cfg.dmax)
-    # ops whose destination is stuck terminate with OVERFLOW (boundedness).
-    op_stuck = pending & stuck[bucket]
-    status = jnp.where(op_stuck, jnp.int8(OVERFLOW), status)
-    applied_seq = jnp.where(op_stuck, ops.seq, st.applied_seq)
-    pending = pending & ~op_stuck
-    st = st._replace(error=st.error | stuck.any(), applied_seq=applied_seq)
-
+    P, B = cfg.pool_size, cfg.bucket_size
+    k_max = split_ids.shape[0]
     iota = jnp.arange(P + 1, dtype=jnp.int32)
-    split_ids = jnp.sort(jnp.where(splittable, iota, jnp.int32(P)))[:n]
-    valid = split_ids < P
+    split_ids = jnp.where(valid, split_ids, jnp.int32(P))
     k = valid.sum().astype(jnp.int32)
 
-    ids_all, st = _alloc_pairs(cfg, st, k)
-    rankpos = jnp.arange(n, dtype=jnp.int32)
+    ids_all, st = _alloc_pairs(cfg, st, k, k_max)
+    rankpos = jnp.arange(k_max, dtype=jnp.int32)
     id0 = jnp.where(valid, ids_all[2 * rankpos], jnp.int32(P))
     id1 = jnp.where(valid, ids_all[2 * rankpos + 1], jnp.int32(P))
 
     # --- SplitBucket: redistribute parent items by the (depth+1)-th bit ---
-    pk = st.keys[split_ids]                      # [n, B]
+    pk = st.keys[split_ids]                      # [k_max, B]
     pv = st.vals[split_ids]
     pd = st.bdepth[split_ids]
     pp = st.bprefix[split_ids]
@@ -561,8 +552,9 @@ def _split_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status)
 
     def compact(mask, src, fill):
         pos = jnp.where(mask, jnp.cumsum(mask, axis=-1) - 1, B)  # B = trash col
-        out = jnp.full((n, B + 1), fill, src.dtype)
-        out = out.at[jnp.arange(n)[:, None], pos].set(jnp.where(mask, src, fill))
+        out = jnp.full((k_max, B + 1), fill, src.dtype)
+        out = out.at[jnp.arange(k_max)[:, None], pos].set(
+            jnp.where(mask, src, fill))
         return out[:, :B]
 
     c0k, c0v = compact(to0, pk, EMPTY_KEY), compact(to0, pv, 0)
@@ -609,6 +601,37 @@ def _split_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status)
         bprefix=bprefix, live=live, frozen=frozen, free_stack=free_stack,
         free_top=free_top, counts=counts,
     )
+    return st, k
+
+
+def _split_pass(cfg: TableConfig, st: TableState, ops: OpBatch, pending, status):
+    """SplitBucket + DirectoryUpdate + ApplyPendingResize's re-routing.
+
+    Every full bucket targeted by a still-pending op is split once; pending
+    ops re-route through the updated directory on the next round. At most
+    n buckets can need splitting (each requires a pending op), so the pass
+    is statically sized at n splits.
+    """
+    P, B, n = cfg.pool_size, cfg.bucket_size, cfg.n_lanes
+    _, bucket = _route(cfg, st.directory, ops.key)
+
+    needs = jnp.zeros(P + 1, bool).at[jnp.where(pending, bucket, P)].set(True)
+    needs = needs & st.live & ~st.frozen & (st.counts == B)
+    needs = needs.at[P].set(False)
+    # a bucket already at dmax cannot split: the hash bits are exhausted —
+    # same failure mode as the paper running out of key bits.
+    stuck = needs & (st.bdepth >= cfg.dmax)
+    splittable = needs & (st.bdepth < cfg.dmax)
+    # ops whose destination is stuck terminate with OVERFLOW (boundedness).
+    op_stuck = pending & stuck[bucket]
+    status = jnp.where(op_stuck, jnp.int8(OVERFLOW), status)
+    applied_seq = jnp.where(op_stuck, ops.seq, st.applied_seq)
+    pending = pending & ~op_stuck
+    st = st._replace(error=st.error | stuck.any(), applied_seq=applied_seq)
+
+    iota = jnp.arange(P + 1, dtype=jnp.int32)
+    split_ids = jnp.sort(jnp.where(splittable, iota, jnp.int32(P)))[:n]
+    st, _ = _do_splits(cfg, st, split_ids, split_ids < P)
     return st, pending, status
 
 

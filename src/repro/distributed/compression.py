@@ -12,7 +12,6 @@ transformer; the dry-run's multi-pod mesh exercises the collective.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple, Tuple
 
 import jax

@@ -13,6 +13,7 @@ tool, not a fast path). Tile shapes come from kernels/tuning.py.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -30,14 +31,24 @@ def _backend() -> str:
     return jax.default_backend()
 
 
+def _force_interpret() -> bool:
+    """REPRO_FORCE_INTERPRET=1 pins the Pallas kernels (in interpret mode)
+    as the default hot path on ANY backend. Without it a CPU runner's
+    ``backend="auto"`` quietly resolves to the XLA path and the kernel
+    bodies never execute — CI's kernels-interpret job sets this so the
+    Pallas code paths are really run, not silently skipped."""
+    return os.environ.get("REPRO_FORCE_INTERPRET", "") not in ("", "0")
+
+
 def default_interpret() -> bool:
     """Pallas TPU kernels need interpret mode on any non-TPU backend."""
     return _backend() != "tpu"
 
 
 def kernels_are_default() -> bool:
-    """Kernels are the default hot path only where they compile natively."""
-    return _backend() == "tpu"
+    """Kernels are the default hot path only where they compile natively
+    (or when REPRO_FORCE_INTERPRET pins them for CPU CI coverage)."""
+    return _backend() == "tpu" or _force_interpret()
 
 
 @partial(jax.jit, static_argnames=("cfg", "interpret", "tq", "pc", "dc"))

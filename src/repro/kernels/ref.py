@@ -48,8 +48,6 @@ def apply_ref(kinds: jnp.ndarray, keys: jnp.ndarray, values: jnp.ndarray,
     Paper semantics: the full test comes first — no update (not even Delete)
     applies to a full bucket (status=ST_FULL; handled by the split pass).
     """
-    B = pool_keys.shape[1]
-
     def body(i, carry):
         pk, pv, status = carry
         kind = kinds[i]

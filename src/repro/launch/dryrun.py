@@ -28,7 +28,6 @@ import traceback
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro import compat
 
@@ -137,7 +136,6 @@ def build_step(arch: str, shape_name: str, mesh, variant: str = ""):
         # the paper-integrated serving path: page table = WF-Ext table
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.serving import engine as E
-        from repro.serving.kvcache import PagedState
         shape = SHAPES[shape_name]
         pc = E.make_paged_config(cfg, batch=shape.global_batch,
                                  max_len=shape.seq_len)

@@ -18,7 +18,6 @@ Fault-tolerance contract:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import statistics
 import time
@@ -29,7 +28,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro.configs import get_config, smoke_config
 from repro.launch.mesh import make_local_mesh
-from repro.launch.shardings import batch_shardings, state_shardings
+from repro.launch.shardings import state_shardings
 from repro.training import checkpoint as C
 from repro.training.data import Prefetcher, SyntheticLM
 from repro.training.optimizer import OptConfig

@@ -12,7 +12,7 @@ stack driven by lax.scan — compile time and HLO size stay flat in depth.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -522,7 +522,6 @@ def decode_step(cfg: ModelConfig, params, cache, tokens):
     stack is segmented: windowed layers scan with window-sized cache
     slices, global layers unroll with full-cache attention — HBM traffic
     drops from L·Smax to (L_win·window + L_glob·Smax) per step."""
-    B = tokens.shape[0]
     x = params["embed"].astype(cfg.jdtype)[tokens[:, 0]][:, None]
     x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.jdtype)
     pos = cache["length"]                                 # [B]

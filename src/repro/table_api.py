@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.core import dist as D
 from repro.core import table as T
+from repro.core.policy import ResizePolicy, wrap_apply_fn
 from repro.core.spec import TableSpec, ValueField, normalize_schema  # noqa: F401 (re-export)
 from repro.core.table import NOP, INS, DEL, BatchResult, OpBatch
 # imported eagerly (not inside the dispatch functions): module import runs
@@ -58,7 +59,7 @@ from repro.core.table import NOP, INS, DEL, BatchResult, OpBatch
 from repro.kernels import ops as kops
 
 __all__ = [
-    "Table", "TableSpec", "ValueField", "create",
+    "Table", "TableSpec", "ValueField", "ResizePolicy", "create",
     "NOP", "INS", "DEL", "BatchResult",
 ]
 
@@ -100,8 +101,17 @@ def _raw_lookup(spec: TableSpec, mesh, state, queries):
 
 
 def _raw_apply(spec: TableSpec, mesh, state, ops: OpBatch):
-    """One combining transaction for any placement/backend."""
+    """One combining transaction for any placement/backend.
+
+    ``spec.resize_policy`` composes onto the per-placement ``apply_fn``
+    here — the facade's single wiring point: the policy's split/merge
+    maintenance runs right after each transaction, on the local state for
+    local placement and per shard inside the shard_map body for sharded
+    placement (each shard elastically resizes its own key-space region).
+    """
     _, apply_fn = _local_fns(spec)
+    if spec.resize_policy is not None:
+        apply_fn = wrap_apply_fn(spec.resize_policy, apply_fn)
     if spec.placement == "sharded":
         return D.dist_apply_batch(spec.dist_config(), mesh, state, ops,
                                   apply_fn=apply_fn)
@@ -198,6 +208,20 @@ class Table:
         """Live item count (O(pool) read of the incremental counts; sums
         across shards for stacked sharded states)."""
         return T.table_size(self.state)
+
+    def depth(self):
+        """Logical directory depth (max over shards for sharded placement)
+        — the observable the churn tests/benchmarks track to prove resizes
+        actually happened."""
+        return jnp.max(self.state.depth)
+
+    def policy_stats(self):
+        """Cumulative elastic-policy actions as ``{"splits", "merges"}``
+        (summed over shards). Zeros when ``spec.resize_policy is None`` —
+        reactive overflow splits are deliberately not counted here."""
+        totals = jnp.sum(jnp.reshape(self.state.policy_counts, (-1, 2)),
+                         axis=0)
+        return {"splits": totals[0], "merges": totals[1]}
 
     # -- updates (functional: return (table', BatchResult)) ----------------
 

@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.model import ModelConfig, forward, init_params
-from repro.models.sharding import constrain
 from repro.training.optimizer import OptConfig, OptState, adamw_update, init_opt_state
 
 

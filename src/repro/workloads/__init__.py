@@ -1,0 +1,37 @@
+"""YCSB-style workload subsystem: generators, phased traces, replay.
+
+This package turns "resizing is rare" from an assumption into a measured,
+differentially-checked scenario axis:
+
+* :mod:`repro.workloads.generators` — deterministic seeded key
+  distributions (uniform, Zipf-skewed, latest-skewed) and YCSB-A/B/C/D
+  style operation mixes over a host-side live-set model;
+* :mod:`repro.workloads.trace` — phased traces (fill -> stable -> drain ->
+  refill and friends) materialized as step streams;
+* :mod:`repro.workloads.replay` — runs any trace through the
+  :class:`repro.table_api.Table` facade and differentially checks every
+  result batch (and periodic content probes) against the paper-literal
+  sequential oracle in :mod:`repro.core.reference`;
+* :mod:`repro.workloads.scenarios` — the named scenario registry the tests
+  and ``benchmarks/churn.py`` sweep (uniform / zipf / phased_drain /
+  mixed_churn, each for local and sharded placement).
+
+Everything is seed-deterministic: the same scenario name and seed produce
+bit-identical op streams on every host.
+"""
+
+from repro.workloads.generators import OpMix, YCSB_MIXES
+from repro.workloads.replay import ReplayMismatch, replay
+from repro.workloads.scenarios import SCENARIOS, get_scenario
+from repro.workloads.trace import Phase, Trace
+
+__all__ = [
+    "OpMix",
+    "YCSB_MIXES",
+    "Phase",
+    "Trace",
+    "replay",
+    "ReplayMismatch",
+    "SCENARIOS",
+    "get_scenario",
+]

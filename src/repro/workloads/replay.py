@@ -1,0 +1,251 @@
+"""Trace replayer: run a workload through the facade, check it against the
+paper-literal sequential oracle, and report what the elastic policy did.
+
+The replayer is the differential harness of the churn engine. Every step it
+
+1. applies the step's mutation batch through :meth:`Table.apply` and
+   compares the per-lane statuses with the oracle applied in lane order
+   (the combining transaction's linearization within a bucket);
+2. runs the step's read batch through :meth:`Table.lookup` and compares
+   found/value against the oracle's map (misses included — the generator
+   plants guaranteed-absent probes);
+3. samples the logical directory depth, counting increases and decreases —
+   the externally observable trace of splits and merges.
+
+A final sweep looks up every key the trace ever touched and checks exact
+content parity. Mismatches raise :class:`ReplayMismatch` (or are collected
+when ``raise_on_mismatch=False``); the returned report carries depth
+trajectory, policy action counts, phase throughput, and check totals, and
+is what ``benchmarks/churn.py`` serializes and CI uploads as an artifact.
+
+The oracle has no resize policy — which is the point: the policy must be
+content-transparent, so a policy-driven table and the policy-free oracle
+must agree on every status and every lookup, while the depth trajectory
+proves the table really did resize under the workload.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.reference import SeqExtHash
+from repro.workloads.generators import DEL, INS, NOP
+from repro.workloads.trace import Trace, gen_steps
+
+
+class ReplayMismatch(AssertionError):
+    """A differential check against the sequential oracle failed."""
+
+
+def _ref_for(spec) -> SeqExtHash:
+    # a sharded table's shard id consumes the top shard_bits of the hash,
+    # so the aggregate behaves like one local table with dmax + shard_bits
+    extra = spec.shard_bits if spec.placement == "sharded" else 0
+    return SeqExtHash(
+        dmax=spec.dmax + extra,
+        bucket_size=spec.bucket_size,
+        hash_name=spec.hash_name,
+    )
+
+
+def replay(
+    spec,
+    trace: Trace,
+    mesh=None,
+    check: bool = True,
+    depth_every: int = 1,
+    lookup_chunk: int = 4096,
+    raise_on_mismatch: bool = True,
+    max_examples: int = 8,
+) -> dict:
+    """Run ``trace`` through a fresh table built from ``spec``.
+
+    ``check=False`` skips the oracle entirely (benchmark mode: no per-step
+    host sync beyond the ``depth_every`` sampling). Returns the report
+    dict described in the module docstring."""
+    from repro.table_api import Table
+
+    assert spec.value_schema is None, "replay drives the raw i32 value mode"
+    table = Table.create(spec, mesh)
+    ref: Optional[SeqExtHash] = _ref_for(spec) if check else None
+
+    mutations = reads = steps = 0
+    status_mismatches = content_mismatches = 0
+    examples: list = []
+    touched: set = set()
+
+    depth_traj = [int(table.depth())]
+    increases = decreases = 0
+    phase_rows: list = []
+    cur_phase = None
+    phase_t0 = time.perf_counter()
+    phase_ops = phase_steps = 0
+
+    def note(kind: str, detail) -> None:
+        nonlocal status_mismatches, content_mismatches
+        if kind == "status":
+            status_mismatches += 1
+        else:
+            content_mismatches += 1
+        if len(examples) < max_examples:
+            examples.append({"kind": kind, "detail": detail})
+        if raise_on_mismatch:
+            raise ReplayMismatch(f"{kind} mismatch: {detail}")
+
+    def flush_phase(next_name: Optional[str]) -> None:
+        nonlocal cur_phase, phase_t0, phase_ops, phase_steps
+        if cur_phase is not None:
+            import jax
+
+            jax.block_until_ready(table.state.depth)
+            dt = time.perf_counter() - phase_t0
+            phase_rows.append(
+                {
+                    "name": cur_phase,
+                    "steps": phase_steps,
+                    "ops": phase_ops,
+                    "seconds": round(dt, 6),
+                    "mops": round(phase_ops / dt / 1e6, 6) if dt > 0 else 0.0,
+                }
+            )
+        cur_phase = next_name
+        phase_t0 = time.perf_counter()
+        phase_ops = phase_steps = 0
+
+    for step in gen_steps(trace):
+        if step.phase != cur_phase:
+            flush_phase(step.phase)
+        steps += 1
+        phase_steps += 1
+
+        m = int(step.kinds.shape[0])
+        if m:
+            table, res = table.apply(step.kinds, step.keys, step.vals)
+            mutations += step.n_mutations
+            phase_ops += m
+            touched.update(int(k) for k in step.keys[step.kinds != NOP])
+            if ref is not None:
+                got = np.asarray(res.status)
+                for lane in range(m):
+                    kind = int(step.kinds[lane])
+                    if kind == NOP:
+                        continue
+                    key = int(step.keys[lane])
+                    if kind == INS:
+                        want = ref.insert(key, int(step.vals[lane]))
+                    else:
+                        assert kind == DEL
+                        want = ref.delete(key)
+                    if int(got[lane]) != want:
+                        note(
+                            "status",
+                            {
+                                "step": steps,
+                                "lane": lane,
+                                "op": "ins" if kind == INS else "del",
+                                "key": key,
+                                "got": int(got[lane]),
+                                "want": want,
+                            },
+                        )
+
+        r = int(step.reads.shape[0])
+        if r:
+            found, vals = table.lookup(step.reads)
+            reads += r
+            phase_ops += r
+            if ref is not None:
+                found = np.asarray(found)
+                vals = np.asarray(vals)
+                for i in range(r):
+                    key = int(step.reads[i])
+                    w_found, w_val = ref.lookup(key)
+                    got_f, got_v = bool(found[i]), int(vals[i])
+                    if got_f != w_found or (w_found and got_v != w_val):
+                        note(
+                            "content",
+                            {
+                                "step": steps,
+                                "key": key,
+                                "got": (got_f, got_v),
+                                "want": (w_found, w_val),
+                            },
+                        )
+
+        if depth_every and steps % depth_every == 0:
+            d = int(table.depth())
+            if d > depth_traj[-1]:
+                increases += 1
+            elif d < depth_traj[-1]:
+                decreases += 1
+            depth_traj.append(d)
+    flush_phase(None)
+
+    # final sweep: every key the trace ever mutated, plus the absent band
+    if ref is not None:
+        ref_map = ref.as_dict()
+        probe = np.asarray(sorted(touched), np.int32)
+        for lo in range(0, len(probe), lookup_chunk):
+            q = probe[lo : lo + lookup_chunk]
+            found, vals = table.lookup(q)
+            found = np.asarray(found)
+            vals = np.asarray(vals)
+            for i, key in enumerate(q):
+                key = int(key)
+                want = ref_map.get(key)
+                got = int(vals[i]) if bool(found[i]) else None
+                if got != want:
+                    note(
+                        "content",
+                        {"final": True, "key": key, "got": got, "want": want},
+                    )
+        if int(table.size()) != len(ref_map):
+            note(
+                "content",
+                {"final_size": int(table.size()), "want": len(ref_map)},
+            )
+
+    stats = table.policy_stats()
+    policy_row = None
+    if spec.resize_policy is not None:
+        policy_row = {
+            "split_watermark": spec.resize_policy.split_watermark,
+            "merge_watermark": spec.resize_policy.merge_watermark,
+            "splits": int(stats["splits"]),
+            "merges": int(stats["merges"]),
+        }
+    report = {
+        "trace": trace.name,
+        "placement": spec.placement,
+        "backend": spec.backend,
+        "policy": policy_row,
+        "steps": steps,
+        "mutations": mutations,
+        "reads": reads,
+        "checked": ref is not None,
+        "status_mismatches": status_mismatches,
+        "content_mismatches": content_mismatches,
+        "mismatch_examples": examples,
+        "depth": {
+            "start": depth_traj[0],
+            "max": max(depth_traj),
+            "final": depth_traj[-1],
+            "increases": increases,
+            "decreases": decreases,
+            "trajectory": depth_traj,
+        },
+        "error_flag": bool(np.asarray(table.state.error).any()),
+        "phases": phase_rows,
+    }
+    # a set error flag means the scenario saturated capacity (pool rows or
+    # hash bits) — scenarios are sized to resize, not to exhaust, so that
+    # is a failure even when every differential check agreed
+    report["ok"] = (
+        status_mismatches == 0
+        and content_mismatches == 0
+        and not report["error_flag"]
+    )
+    return report

@@ -7,7 +7,6 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import baselines as BL
 
