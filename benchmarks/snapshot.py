@@ -1,0 +1,142 @@
+"""Snapshot benchmark: image size + save/restore latency vs table size.
+
+Sweeps table populations through the durable-image round trip
+(``Table.save`` → ``Table.restore``) and records, per size and value mode
+(raw i32 word vs a typed two-field schema):
+
+* ``image_bytes``    — the on-disk npz size (the canonical form stores
+  items, not pool rows, so bytes scale with *content*, not capacity);
+* ``save_ms``        — extract + serialize wall time (host-side after one
+  device_get);
+* ``restore_ms``     — load + feasibility check + replay through the
+  combining transaction (device work: the real migration cost);
+* ``restore_kops``   — items replayed per second during restore;
+* parity fields      — restored size must equal the saved size (asserted).
+
+Output is ``BENCH_snapshot.json``::
+
+    {"rows": {"raw/4096": {"image_bytes": ..., "save_ms": ...,
+                           "restore_ms": ..., ...},
+              "schema/4096": {...}, ...}}
+
+Usage:
+  python -m benchmarks.snapshot                      # default size sweep
+  python -m benchmarks.snapshot --sizes 512,8192 --repeats 3
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+
+def _spec(schema: bool, n_items: int):
+    import jax.numpy as jnp
+
+    from repro.core.spec import TableSpec
+
+    # pool sized ~4 buckets per expected split-threshold group, dmax with
+    # headroom (the sweep measures latency, not capacity edges)
+    dmax = max(8, (n_items // 4).bit_length() + 2)
+    pool = max(256, 2 * (n_items // 4))
+    kw = dict(dmax=dmax, bucket_size=8, pool_size=pool, n_lanes=16)
+    if schema:
+        kw["value_schema"] = {"page": jnp.int32, "score": (jnp.float32, (2,))}
+    return TableSpec(**kw)
+
+
+def run_size(n_items: int, schema: bool, seed: int) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.table_api import Table
+
+    rng = np.random.default_rng(seed)
+    universe = np.arange(1, 1 << 30)
+    keys = rng.choice(universe, size=n_items, replace=False).astype(np.int32)
+    spec = _spec(schema, n_items)
+    t = Table.create(spec)
+    if schema:
+        values = {
+            "page": (keys * 3).astype(np.int32),
+            "score": np.stack([keys / 7, keys / 11], -1).astype(np.float32),
+        }
+    else:
+        values = (keys * 3).astype(np.int32)
+    t, res = t.insert(keys, values)
+    assert not bool(np.asarray(res.error).any()), "sweep table overflowed"
+    jax.block_until_ready(t.state.depth)
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "table.npz")
+        t0 = time.perf_counter()
+        t.save(path)
+        save_s = time.perf_counter() - t0
+        image_bytes = os.path.getsize(path)
+
+        t0 = time.perf_counter()
+        t2 = Table.restore(path, spec)
+        jax.block_until_ready(t2.state.depth)
+        restore_s = time.perf_counter() - t0
+    n2 = int(t2.size())
+    assert n2 == n_items, (n2, n_items)
+    return {
+        "n_items": n_items,
+        "image_bytes": image_bytes,
+        "bytes_per_item": round(image_bytes / n_items, 2),
+        "save_ms": round(save_s * 1e3, 3),
+        "restore_ms": round(restore_s * 1e3, 3),
+        "restore_kops": round(n_items / restore_s / 1e3, 3),
+        "depth": int(t2.depth()),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--sizes",
+        default="256,1024,4096",
+        help="comma list of item counts",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--repeats",
+        type=int,
+        default=1,
+        help="keep the fastest save+restore per row",
+    )
+    ap.add_argument("--out", default="BENCH_snapshot.json")
+    args = ap.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",") if s.strip()]
+    rows: dict = {}
+    for schema in (False, True):
+        mode = "schema" if schema else "raw"
+        for n in sizes:
+            best: dict = {}
+            for _ in range(max(1, args.repeats)):
+                rec = run_size(n, schema, args.seed)
+                cost = rec["save_ms"] + rec["restore_ms"]
+                if not best or cost < best["save_ms"] + best["restore_ms"]:
+                    best = rec
+            rows[f"{mode}/{n}"] = best
+            print(
+                f"{mode}/{n},{best['image_bytes']}B,"
+                f"save={best['save_ms']}ms,restore={best['restore_ms']}ms,"
+                f"{best['restore_kops']}Kops",
+                flush=True,
+            )
+
+    with open(args.out, "w") as f:
+        json.dump({"sizes": sizes, "rows": rows}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[snapshot] wrote {len(rows)} rows to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

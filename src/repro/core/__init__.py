@@ -26,8 +26,13 @@ _TABLE_EXPORTS = (
 )
 _SPEC_EXPORTS = ("TableSpec", "ValueField", "normalize_schema")
 _POLICY_EXPORTS = ("ResizePolicy", "apply_policy")
+_SNAPSHOT_EXPORTS = (
+    "TableImage", "extract_image", "restore_from_image",
+    "save_image", "load_image", "check_restorable",
+)
 
-__all__ = list(_TABLE_EXPORTS + _SPEC_EXPORTS + _POLICY_EXPORTS)
+__all__ = list(_TABLE_EXPORTS + _SPEC_EXPORTS + _POLICY_EXPORTS
+               + _SNAPSHOT_EXPORTS)
 
 
 def __getattr__(name):
@@ -40,6 +45,9 @@ def __getattr__(name):
     if name in _POLICY_EXPORTS:
         from repro.core import policy
         return getattr(policy, name)
+    if name in _SNAPSHOT_EXPORTS:
+        from repro.core import snapshot
+        return getattr(snapshot, name)
     raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
 
 

@@ -7,6 +7,7 @@ wrap-around, matching the fixed-width hash keys of the paper.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 HASH_BITS = 32
 # INT32_MIN marks an empty bucket slot. The key space is all int32 except
@@ -36,6 +37,25 @@ def identity_hash(x: jnp.ndarray) -> jnp.ndarray:
 
 
 HASH_FNS = {"fmix32": fmix32, "identity": identity_hash}
+
+
+def hash_np(hash_name: str, keys: np.ndarray, shift: int = 0) -> np.ndarray:
+    """Host-side numpy mirror of ``HASH_FNS`` (+ ``TableConfig.hash_shift``).
+
+    The ONE copy of the fmix32 constants outside the device path — used by
+    the invariant checker and the snapshot canonicalizer, which both need
+    to hash device state without tracing."""
+    h = keys.astype(np.uint32)
+    if hash_name != "identity":
+        assert hash_name == "fmix32", hash_name
+        h = h ^ (h >> np.uint32(16))
+        h = h * np.uint32(0x85EBCA6B)
+        h = h ^ (h >> np.uint32(13))
+        h = h * np.uint32(0xC2B2AE35)
+        h = h ^ (h >> np.uint32(16))
+    if shift:
+        h = h << np.uint32(shift)
+    return h
 
 
 def prefix(h: jnp.ndarray, depth) -> jnp.ndarray:

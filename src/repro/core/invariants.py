@@ -7,22 +7,17 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.hashing import HASH_BITS
+from repro.core.hashing import HASH_BITS, hash_np
 from repro.core.table import TableConfig, TableState
 
 _EMPTY = -2147483648
 
 
 def _hash_np(cfg: TableConfig, keys: np.ndarray) -> np.ndarray:
-    h = keys.astype(np.uint32)
-    if cfg.hash_name == "identity":
-        return h
-    h = h ^ (h >> np.uint32(16))
-    h = h * np.uint32(0x85EBCA6B)
-    h = h ^ (h >> np.uint32(13))
-    h = h * np.uint32(0xC2B2AE35)
-    h = h ^ (h >> np.uint32(16))
-    return h
+    # hash_shift matters for sharded placement: the shard id consumed the
+    # top bits (the per-shard hash_fn shifts them out) — mirroring it makes
+    # per-shard states invariant-checkable too
+    return hash_np(cfg.hash_name, keys, cfg.hash_shift)
 
 
 def check_invariants(cfg: TableConfig, state: TableState,

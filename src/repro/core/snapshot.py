@@ -1,0 +1,362 @@
+"""Durable table images + elastic N→M re-shard (DESIGN.md §10).
+
+A running table is pinned to its process and to the mesh it was built on;
+this module detaches the *logical content* from both. :func:`extract_image`
+serializes a :class:`repro.table_api.Table` — any placement, any backend —
+into a canonical, placement-independent :class:`TableImage`:
+
+* **logical-bucket order** — items are sorted by (full 32-bit hash, key),
+  i.e. the order a directory walk at maximal depth would visit them. Two
+  tables with the same key→value content produce the same image regardless
+  of their physical layout history (split order, free-stack state, slot
+  permutations, shard count);
+* **frozen/tombstone lanes normalized** — only live buckets' occupied
+  slots are extracted; frozen flags, retired parents, and the write-trash
+  rows never reach the image (a mid-freeze table images identically to its
+  unfrozen twin);
+* **payloads resolved** — in value-schema mode the i32 handle words are
+  dereferenced through the slabs at save time, so the image stores typed
+  per-item payload rows and is independent of handle allocation order and
+  ``slab_capacity``;
+* **a versioned header** — ``FORMAT_VERSION`` is written into every image
+  and readers are registered per version, so old images keep loading as
+  the format evolves (an image from a *newer* writer fails with a clear
+  error instead of a garbage load).
+
+Restore replays the image through the ordinary combining transaction:
+:func:`restore_from_image` builds a fresh table for the **target** spec —
+which may differ from the save spec in placement (local → sharded), shard
+count (N → M devices), backend, ``dmax``, ``pool_size`` or
+``slab_capacity`` — and inserts the items through ``Table.apply``. Every
+bucket re-routes through the existing directory math (hash → shard →
+directory entry → reactive splits), so there is no bespoke migration path
+to keep correct: restore is exactly as trustworthy as the transaction the
+whole test suite already gates. Infeasible targets (a ``dmax`` too small
+for the image's densest hash-prefix group, an undersized slab store, a
+mismatched value schema) are rejected on the host with a clear error
+*before* any device work.
+
+Policy counters survive the round trip (summed over shards, reinstalled on
+shard 0 — :meth:`Table.policy_stats` sums them back). Per-lane transaction
+state (``applied_seq``, ``last_status``) is session state, not content: a
+revived table starts a fresh exactly-once session. The save-side error
+flag is recorded in the header as provenance but not re-imposed — reviving
+into a bigger geometry is the remediation for capacity exhaustion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+from typing import Any, Dict, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import HASH_BITS, hash_np
+from repro.core.spec import TableSpec
+
+FORMAT_MAGIC = "wfext-table-image"
+FORMAT_VERSION = 1
+
+_EMPTY = -2147483648          # EMPTY_KEY as a host int (no jax import cost)
+
+# lanes per restore transaction chunk: images are padded with NOP lanes to
+# a multiple of this so restore compiles O(1) distinct shapes, not one per
+# image size
+_RESTORE_PAD = 1024
+
+
+@dataclasses.dataclass
+class TableImage:
+    """A canonical, placement-independent table image (host arrays).
+
+    ``values`` is ``i32[n]`` in raw mode or ``{field: [n, *shape]}`` in
+    value-schema mode. ``header`` carries the versioned metadata written
+    to disk (see :func:`extract_image`).
+    """
+
+    header: Dict[str, Any]
+    keys: np.ndarray
+    values: Union[np.ndarray, Dict[str, np.ndarray]]
+
+    @property
+    def n_items(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def schema(self):
+        return self.header.get("value_schema")
+
+
+# ---------------------------------------------------------------------------
+# canonicalization helpers
+
+
+def _aggregate_bits(spec: TableSpec) -> int:
+    """Top hash bits the spec's aggregate addressing can spend: the shard
+    id consumes ``shard_bits`` before the per-shard directory's ``dmax``."""
+    extra = spec.shard_bits if spec.placement == "sharded" else 0
+    return spec.dmax + extra
+
+
+def _schema_header(spec: TableSpec):
+    if spec.value_schema is None:
+        return None
+    return [[f.name, f.dtype, list(f.shape)] for f in spec.value_schema]
+
+
+def _schema_key(schema) -> Optional[tuple]:
+    """Hashable normal form of a schema header (or a spec's value_schema)."""
+    if schema is None:
+        return None
+    return tuple((str(n), str(d), tuple(int(x) for x in s))
+                 for n, d, s in schema)
+
+
+# ---------------------------------------------------------------------------
+# extraction (save side)
+
+
+def extract_image(table) -> TableImage:
+    """Canonical image of a live ``Table`` handle (any placement/backend).
+
+    Pure host work after one ``device_get``: mask live buckets' occupied
+    slots (sharded states flatten their leading shard axis — each shard is
+    just more pool rows of the same logical table), resolve schema handles
+    into payload rows, and sort by (full hash, key)."""
+    spec = table.spec
+    keys = np.asarray(table.state.keys).reshape(-1, spec.bucket_size)
+    vals = np.asarray(table.state.vals).reshape(-1, spec.bucket_size)
+    live = np.asarray(table.state.live).reshape(-1)
+
+    slot_mask = live[:, None] & (keys != _EMPTY)
+    item_keys = keys[slot_mask].astype(np.int32)
+    item_words = vals[slot_mask].astype(np.int32)
+
+    order = np.lexsort((item_keys, hash_np(spec.hash_name, item_keys)))
+    item_keys = item_keys[order]
+    item_words = item_words[order]
+
+    if spec.value_schema is None:
+        values: Union[np.ndarray, Dict[str, np.ndarray]] = item_words
+    else:
+        values = {f.name: np.asarray(table.slabs[f.name])[item_words]
+                  for f in spec.value_schema}
+
+    pc = np.asarray(table.state.policy_counts).reshape(-1, 2)
+    header = {
+        "format": FORMAT_MAGIC,
+        "version": FORMAT_VERSION,
+        "n_items": int(item_keys.shape[0]),
+        "hash_name": spec.hash_name,
+        "value_schema": _schema_header(spec),
+        "policy_counts": [int(x) for x in pc.sum(axis=0)],
+        "error": bool(np.asarray(table.state.error).any()),
+        "saved_spec": {
+            "placement": spec.placement,
+            "shard_bits": spec.shard_bits,
+            "dmax": spec.dmax,
+            "bucket_size": spec.bucket_size,
+            "pool_size": spec.pool_size,
+        },
+    }
+    return TableImage(header=header, keys=item_keys, values=values)
+
+
+# ---------------------------------------------------------------------------
+# on-disk format (versioned npz)
+
+
+def save_image(image: TableImage, path: str) -> str:
+    """Write ``image`` to ``path`` as a single npz file (atomic rename)."""
+    arrays = {"keys": image.keys}
+    if isinstance(image.values, dict):
+        for name, arr in image.values.items():
+            arrays[f"field__{name}"] = arr
+    else:
+        arrays["vals"] = image.values
+    buf = io.BytesIO()
+    np.savez(buf, __header__=np.frombuffer(
+        json.dumps(image.header, sort_keys=True).encode(), np.uint8),
+        **arrays)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(buf.getvalue())
+    os.replace(tmp, path)  # atomicity point (mirrors training/checkpoint.py)
+    return path
+
+
+def _read_v1(z, header: Dict[str, Any]) -> TableImage:
+    keys = np.asarray(z["keys"], np.int32)
+    if header.get("value_schema") is None:
+        values: Union[np.ndarray, Dict[str, np.ndarray]] = np.asarray(
+            z["vals"], np.int32)
+    else:
+        values = {str(name): np.asarray(z[f"field__{name}"])
+                  for name, _dtype, _shape in header["value_schema"]}
+    return TableImage(header=header, keys=keys, values=values)
+
+
+# version → reader. New format versions append here; existing readers are
+# never edited, so every image ever written keeps loading.
+_READERS = {1: _read_v1}
+
+
+def load_image(path: str) -> TableImage:
+    """Read an image written by any supported :data:`FORMAT_VERSION`."""
+    with np.load(path, allow_pickle=False) as z:
+        if "__header__" not in z:
+            raise ValueError(f"{path}: not a {FORMAT_MAGIC} file "
+                             "(missing header)")
+        header = json.loads(bytes(z["__header__"]).decode())
+        if header.get("format") != FORMAT_MAGIC:
+            raise ValueError(
+                f"{path}: bad magic {header.get('format')!r} "
+                f"(want {FORMAT_MAGIC!r})")
+        version = int(header.get("version", -1))
+        reader = _READERS.get(version)
+        if reader is None:
+            raise ValueError(
+                f"{path}: image version {version} is newer than this "
+                f"reader (supports {sorted(_READERS)}); upgrade the repo "
+                "to restore it")
+        return reader(z, header)
+
+
+# ---------------------------------------------------------------------------
+# feasibility (host-side, before any device work)
+
+
+def check_restorable(image: TableImage, spec: TableSpec) -> None:
+    """Raise ``ValueError`` when ``spec`` cannot hold ``image``.
+
+    Three exact checks: the value schema must match field-for-field; the
+    densest group of keys sharing all of the target's aggregate hash bits
+    (``shard_bits + dmax``) must fit one bucket — a larger group would
+    OVERFLOW no matter how the table splits; and in schema mode the slab
+    store must have a row per item. Pool exhaustion depends on the split
+    trajectory and is checked after the replay instead.
+    """
+    want = (_schema_key([[f.name, f.dtype, list(f.shape)]
+                         for f in spec.value_schema])
+            if spec.value_schema is not None else None)
+    have = _schema_key(image.schema)
+    if want != have:
+        raise ValueError(
+            "value schema mismatch: image has "
+            f"{have and [f[0] for f in have]}, restore spec has "
+            f"{want and [f[0] for f in want]}; save and restore specs must "
+            "declare the same fields (dtype and shape included)")
+
+    if image.n_items == 0:
+        return
+
+    bits = _aggregate_bits(spec)
+    prefixes = hash_np(spec.hash_name, image.keys) >> np.uint32(
+        HASH_BITS - bits)
+    _, group_sizes = np.unique(prefixes, return_counts=True)
+    worst = int(group_sizes.max())
+    if worst > spec.bucket_size:
+        # smallest aggregate depth that thins every group to <= bucket_size
+        h = hash_np(spec.hash_name, image.keys)
+        need = bits
+        for d in range(bits + 1, HASH_BITS + 1):
+            _, sizes = np.unique(h >> np.uint32(HASH_BITS - d),
+                                 return_counts=True)
+            if int(sizes.max()) <= spec.bucket_size:
+                need = d
+                break
+        else:
+            need = HASH_BITS + 1  # duplicate hashes beyond bucket capacity
+        extra = spec.shard_bits if spec.placement == "sharded" else 0
+        raise ValueError(
+            f"restore target too shallow: {worst} keys share all "
+            f"{bits} aggregate hash bits (shard_bits + dmax) but buckets "
+            f"hold {spec.bucket_size}; need dmax >= {need - extra} "
+            f"for placement={spec.placement!r} (image has "
+            f"{image.n_items} items)")
+
+    if spec.value_schema is not None and image.n_items > spec.slab_rows:
+        raise ValueError(
+            f"slab store too small: image has {image.n_items} items, "
+            f"restore spec provides slab_rows={spec.slab_rows}; raise "
+            "slab_capacity (or pool_size*bucket_size)")
+
+    capacity = spec.n_shards * spec.pool_size * spec.bucket_size
+    if image.n_items > capacity:
+        raise ValueError(
+            f"restore target too small: image has {image.n_items} items, "
+            f"spec caps out at {capacity} "
+            "(n_shards * pool_size * bucket_size)")
+
+
+# ---------------------------------------------------------------------------
+# restore (replay through the ordinary combining transaction)
+
+
+def restore_from_image(image: TableImage, spec: TableSpec, mesh=None):
+    """Build a fresh ``Table`` for ``spec`` holding ``image``'s content.
+
+    The restore spec may differ arbitrarily from the save spec (placement,
+    shard count, backend, sizing) as long as :func:`check_restorable`
+    passes; items re-route through the existing directory math via
+    ``Table.apply``. The elastic policy is detached during the load (the
+    replay's reactive splits must not pollute the restored counters) and
+    reattached afterwards together with the image's cumulative counts.
+    """
+    from repro.table_api import Table  # deferred: table_api imports spec
+
+    check_restorable(image, spec)
+    load_spec = (dataclasses.replace(spec, resize_policy=None)
+                 if spec.resize_policy is not None else spec)
+    table = Table.create(load_spec, mesh)
+
+    n = image.n_items
+    if n:
+        pad = -n % _RESTORE_PAD
+        kinds = np.zeros(n + pad, np.int32)        # NOP
+        kinds[:n] = 1                              # INS
+        keys = np.zeros(n + pad, np.int32)
+        keys[:n] = image.keys
+        if isinstance(image.values, dict):
+            values = {
+                name: np.concatenate(
+                    [arr, np.zeros((pad,) + arr.shape[1:], arr.dtype)])
+                for name, arr in image.values.items()}
+        else:
+            values = np.concatenate(
+                [image.values, np.zeros(pad, np.int32)])
+        table, res = table.apply(kinds, keys, values)
+        if bool(np.asarray(res.error).any()):
+            seen = np.unique(np.asarray(res.status)[:n]).tolist()
+            raise RuntimeError(
+                f"restore exhausted the target geometry while replaying "
+                f"{n} items (statuses {seen}); raise pool_size "
+                "(bucket-pool rows) or dmax and retry")
+
+    st = table.state
+    saved_counts = jnp.asarray(image.header.get("policy_counts", [0, 0]),
+                               jnp.int32)
+    if spec.placement == "sharded":
+        # aggregate counters land on shard 0; policy_stats() sums shards
+        st = st._replace(policy_counts=st.policy_counts.at[0].set(saved_counts))
+    else:
+        st = st._replace(policy_counts=saved_counts)
+    return Table(spec, table.mesh, st, table.slabs, table.slab_live,
+                 table.seq)
+
+
+# ---------------------------------------------------------------------------
+# facade entry points (Table.save / Table.restore delegate here)
+
+
+def save_table(table, path: str) -> str:
+    """Serialize ``table`` to a durable image file at ``path``."""
+    return save_image(extract_image(table), path)
+
+
+def restore_table(path: str, spec: TableSpec, mesh=None):
+    """Load the image at ``path`` into a fresh table built for ``spec``."""
+    return restore_from_image(load_image(path), spec, mesh)

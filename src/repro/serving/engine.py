@@ -60,6 +60,39 @@ def init_engine(cfg: ModelConfig, pc: KV.PagedConfig) -> EngineState:
     )
 
 
+def save_engine(path: str, pc: KV.PagedConfig, est: EngineState) -> str:
+    """Durable engine image: the paged cache (page-table image + K/V
+    pages, see :func:`repro.serving.kvcache.save_paged`) plus the current
+    per-slot tokens, written atomically as ONE image directory.
+    Restartable on another process/geometry via :func:`warm_start_engine`."""
+    return KV.save_paged(pc, est.paged, path,
+                         extras={"tokens": est.tokens})
+
+
+def warm_start_engine(pc_new: KV.PagedConfig, path: str) -> EngineState:
+    """Revive a saved engine under ``pc_new`` (may grow batch / pages /
+    page-table depth) and resume decoding mid-sequence — no prefill, no
+    drained requests. New slots start empty (token 0, seq_id -1)."""
+    import numpy as np
+    paged = KV.restore_paged(pc_new, path)
+    tokens = KV.load_extra(path, "tokens")
+    pad = pc_new.batch - tokens.shape[0]
+    tokens = np.concatenate([tokens, np.zeros(pad, np.int32)])
+    return EngineState(paged=paged, tokens=jnp.asarray(tokens, jnp.int32))
+
+
+def handover_engine(pc_old: KV.PagedConfig, pc_new: KV.PagedConfig,
+                    est: EngineState) -> EngineState:
+    """Drain-free in-memory handover: the successor engine under
+    ``pc_new`` continues every live request at its exact decode position
+    (the page table re-routes through its canonical image; pages and
+    tokens reseat verbatim)."""
+    paged = KV.handover(pc_old, est.paged, pc_new)
+    pad = pc_new.batch - pc_old.batch
+    tokens = jnp.concatenate([est.tokens, jnp.zeros(pad, jnp.int32)])
+    return EngineState(paged=paged, tokens=tokens)
+
+
 @partial(jax.jit, static_argnames=("cfg", "pc"), donate_argnums=2)
 def serve_step(cfg: ModelConfig, pc: KV.PagedConfig, est: EngineState, params):
     """One batched decode step over the paged cache. Returns (est', logits).

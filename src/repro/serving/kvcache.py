@@ -24,11 +24,14 @@ know how full a page is).
 from __future__ import annotations
 
 import dataclasses
+import os
+import shutil
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import table as T
 from repro.core.spec import TableSpec
@@ -209,6 +212,158 @@ def append_token(pc: PagedConfig, st: PagedState, k_new, v_new):
     return st._replace(table=table, pages_k=pages_k, pages_v=pages_v,
                        page_alloc=page_alloc, free_top=free_top,
                        lengths=lengths)
+
+
+# ---------------------------------------------------------------------------
+# durable images & drain-free handover (core/snapshot.py; DESIGN.md §10)
+
+
+def _check_geometry(pc_old: PagedConfig, pc_new: PagedConfig,
+                    page_alloc: int, max_len: int) -> None:
+    """Reject handover targets the live cache cannot reseat into."""
+    same = ("n_layers", "n_kv_heads", "head_dim", "page_size", "dtype")
+    for f in same:
+        if getattr(pc_old, f) != getattr(pc_new, f):
+            raise ValueError(
+                f"handover cannot change {f}: {getattr(pc_old, f)} -> "
+                f"{getattr(pc_new, f)} (page contents would be "
+                "reshaped/re-encoded)")
+    if pc_new.n_pages < page_alloc:
+        raise ValueError(
+            f"handover target has n_pages={pc_new.n_pages} but "
+            f"{page_alloc} pages are already allocated; grow n_pages")
+    if pc_new.batch < pc_old.batch:
+        raise ValueError(
+            f"handover target batch={pc_new.batch} < current batch="
+            f"{pc_old.batch}; slots are positional — shrink by evicting "
+            "first")
+    if pc_new.max_blocks * pc_new.page_size < max_len:
+        raise ValueError(
+            f"handover target max_blocks={pc_new.max_blocks} holds "
+            f"{pc_new.max_blocks * pc_new.page_size} tokens but a live "
+            f"sequence has {max_len}; grow max_blocks (truncation would "
+            "silently drop attention context and leak page mappings)")
+
+
+def _reseat(pc_old: PagedConfig, pc_new: PagedConfig, table: Table,
+            pages_k, pages_v, page_alloc, free_pages, free_top,
+            lengths, seq_ids) -> PagedState:
+    """Re-house a cache's content in ``pc_new``'s geometry: page ids and
+    slot positions are preserved verbatim (the page-table image carries
+    the ids in its value schema), page/slot arrays grow in place."""
+    rows = min(pc_old.n_pages, pc_new.n_pages)
+    shape = (pc_new.n_layers, pc_new.n_pages, pc_new.page_size,
+             pc_new.n_kv_heads, pc_new.head_dim)
+    new_k = jnp.zeros(shape, pc_new.jdtype).at[:, :rows].set(
+        jnp.asarray(pages_k[:, :rows], pc_new.jdtype))
+    new_v = jnp.zeros(shape, pc_new.jdtype).at[:, :rows].set(
+        jnp.asarray(pages_v[:, :rows], pc_new.jdtype))
+    ft = int(free_top)
+    new_free = jnp.zeros(pc_new.n_pages, jnp.int32).at[:ft].set(
+        jnp.asarray(free_pages[:ft], jnp.int32))
+    pad = pc_new.batch - pc_old.batch
+    new_len = jnp.concatenate(
+        [jnp.asarray(lengths, jnp.int32), jnp.zeros(pad, jnp.int32)])
+    new_seq = jnp.concatenate(
+        [jnp.asarray(seq_ids, jnp.int32), jnp.full(pad, -1, jnp.int32)])
+    return PagedState(
+        table=table, pages_k=new_k, pages_v=new_v,
+        page_alloc=jnp.int32(int(page_alloc)),
+        free_pages=new_free, free_top=jnp.int32(ft),
+        lengths=new_len, seq_ids=new_seq)
+
+
+def handover(pc_old: PagedConfig, st: PagedState,
+             pc_new: PagedConfig) -> PagedState:
+    """Drain-free in-memory handover to a new (usually bigger) geometry.
+
+    The page table goes through the canonical image (extract → replay into
+    ``pc_new.table``, which may deepen the directory or resize pools); the
+    K/V pages, allocator and slot registry reseat directly because page
+    ids and slot positions survive the image round trip. No request is
+    drained: the successor engine decodes the very next token."""
+    from repro.core import snapshot
+    _check_geometry(pc_old, pc_new, int(st.page_alloc),
+                    int(np.asarray(st.lengths).max(initial=0)))
+    table = snapshot.restore_from_image(
+        snapshot.extract_image(st.table), pc_new.table)
+    return _reseat(pc_old, pc_new, table, st.pages_k, st.pages_v,
+                   st.page_alloc, st.free_pages, st.free_top,
+                   st.lengths, st.seq_ids)
+
+
+# the PagedConfig geometry recorded in engine.npz so restore checks the
+# SAVED geometry (not the target against itself); dtype rides separately
+# as a string
+_GEOMETRY_FIELDS = ("batch", "n_pages", "n_layers", "n_kv_heads",
+                    "head_dim", "page_size", "max_blocks")
+
+
+def save_paged(pc: PagedConfig, st: PagedState, path: str,
+               extras: dict | None = None) -> str:
+    """Durable image of the whole paged cache at directory ``path``:
+    ``table.npz`` (canonical page-table image) + ``engine.npz`` (K/V
+    pages, page allocator, slot registry, saved geometry). The whole
+    directory is written to ``path.tmp`` and renamed, so a crash mid-save
+    never leaves a mixed-generation image (the same atomicity contract as
+    training/checkpoint.py). bf16 pages are stored as their lossless fp32
+    upcast. ``extras`` (name → host array) ride inside engine.npz — the
+    engine layer stores its per-slot tokens there."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    st.table.save(os.path.join(tmp, "table.npz"))
+
+    def _np(x):
+        arr = np.asarray(jax.device_get(x))
+        return arr.astype(np.float32) if arr.dtype.name == "bfloat16" else arr
+
+    geometry = {f: np.int32(getattr(pc, f)) for f in _GEOMETRY_FIELDS}
+    extras = {f"extra__{k}": _np(v) for k, v in (extras or {}).items()}
+    with open(os.path.join(tmp, "engine.npz"), "wb") as f:
+        np.savez(f, pages_k=_np(st.pages_k), pages_v=_np(st.pages_v),
+                 page_alloc=_np(st.page_alloc), free_pages=_np(st.free_pages),
+                 free_top=_np(st.free_top), lengths=_np(st.lengths),
+                 seq_ids=_np(st.seq_ids), dtype=np.asarray(pc.dtype),
+                 **geometry, **extras)
+    # swap generations without ever deleting the only durable image: the
+    # previous image survives at path.old until the new one is in place
+    # (a crash between the two renames leaves it there for recovery)
+    if os.path.exists(path):
+        old = path + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(path, old)
+        os.rename(tmp, path)  # atomicity point
+        shutil.rmtree(old)
+    else:
+        os.rename(tmp, path)  # atomicity point
+    return path
+
+
+def load_extra(path: str, name: str):
+    """Read one ``extras`` array back from a :func:`save_paged` image."""
+    with np.load(os.path.join(path, "engine.npz")) as z:
+        return np.asarray(z[f"extra__{name}"])
+
+
+def restore_paged(pc_new: PagedConfig, path: str) -> PagedState:
+    """Warm-start a paged cache from :func:`save_paged` output. ``pc_new``
+    may differ from the saving config (bigger batch, more pages, deeper
+    page-table spec) under the same rules as :func:`handover` — the saved
+    geometry is read from the image, so incompatible targets fail with the
+    same clear errors."""
+    table = Table.restore(os.path.join(path, "table.npz"), pc_new.table)
+    with np.load(os.path.join(path, "engine.npz")) as z:
+        saved = {f: int(z[f]) for f in _GEOMETRY_FIELDS}
+        saved["dtype"] = str(z["dtype"])
+        pc_old = dataclasses.replace(pc_new, **saved)
+        _check_geometry(pc_old, pc_new, int(z["page_alloc"]),
+                        int(np.asarray(z["lengths"]).max(initial=0)))
+        return _reseat(pc_old, pc_new, table, z["pages_k"], z["pages_v"],
+                       z["page_alloc"], z["free_pages"], z["free_top"],
+                       z["lengths"], z["seq_ids"])
 
 
 @partial(jax.jit, static_argnames="pc")

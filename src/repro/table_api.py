@@ -275,6 +275,34 @@ class Table:
                                  parent_prefix, parent_depth)
         return self._replace(state=st), ok
 
+    # -- durable images (core/snapshot.py; DESIGN.md §10) ------------------
+
+    def save(self, path: str) -> str:
+        """Serialize to a canonical, placement-independent image file.
+
+        The image captures the logical content (items in logical-bucket
+        order, payload fields resolved, frozen/tombstone lanes normalized)
+        plus the cumulative policy counters under a versioned header —
+        host-side work after one device_get; eager, not jit-safe. Returns
+        ``path``."""
+        from repro.core import snapshot
+        return snapshot.save_table(self, path)
+
+    @classmethod
+    def restore(cls, path: str, spec: TableSpec, mesh=None) -> "Table":
+        """Load an image into a fresh table built for ``spec``.
+
+        ``spec`` may differ from the spec the image was saved under —
+        local → sharded, sharded N → M shards, another backend or sizing —
+        items re-route through the ordinary directory math (hash → shard →
+        directory entry, reactive splits as needed). Infeasible targets
+        (``dmax`` too shallow for the image's densest hash-prefix group,
+        undersized slab store, mismatched value schema) raise
+        ``ValueError`` before any device work. Sharded placement needs
+        ``mesh`` exactly as :meth:`create` does."""
+        from repro.core import snapshot
+        return snapshot.restore_table(path, spec, mesh)
+
 
 jax.tree_util.register_pytree_node(
     Table,

@@ -6,6 +6,14 @@ a target pytree *structure* and an optional target sharding tree, so a
 checkpoint written on one mesh restores onto another (elastic re-shard:
 device_put against the new NamedSharding does the resharding).
 
+WF-Ext tables checkpoint alongside the model params: pass ``tables``
+(a ``{name: Table}`` dict) to :func:`save` and each is serialized as a
+canonical placement-independent image (``table_<name>.npz``, see
+:mod:`repro.core.snapshot`) inside the same atomic step directory.
+:func:`restore_table` revives one by name under a caller-chosen spec,
+which — like the param path — may target a different mesh or shard count
+than the one the checkpoint was written on.
+
 Fault-tolerance contract: a crash mid-save leaves only a .tmp dir (ignored
 by `latest_step`); training resumes from the last renamed step with the
 data-pipeline offset from the manifest.
@@ -31,7 +39,10 @@ def _flat(tree):
     return out
 
 
-def save(ckpt_dir: str, step: int, state: Any, extra: Optional[dict] = None):
+def save(ckpt_dir: str, step: int, state: Any, extra: Optional[dict] = None,
+         tables: Optional[dict] = None):
+    """``tables`` ({name: repro.table_api.Table}) ride in the same atomic
+    step directory as canonical images (see module docstring)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
     final = os.path.join(ckpt_dir, f"step_{step}")
@@ -47,9 +58,14 @@ def save(ckpt_dir: str, step: int, state: Any, extra: Optional[dict] = None):
             arr = arr.astype(np.float32)
         fn = key.replace("/", "__") + ".npy"
         np.save(os.path.join(tmp, fn), arr)
+    if tables:
+        from repro.core import snapshot
+        for name, tbl in sorted(tables.items()):
+            snapshot.save_table(tbl, os.path.join(tmp, f"table_{name}.npz"))
     manifest = {
         "step": step,
         "keys": sorted(leaves),
+        "tables": sorted(tables) if tables else [],
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -103,3 +119,29 @@ def restore(ckpt_dir: str, step: int, like: Any,
                        for p in pathk)
         ordered.append(restored[key])
     return treedef.unflatten(ordered), manifest["extra"]
+
+
+def table_names(ckpt_dir: str, step: int) -> list:
+    """Names of the table images saved alongside step ``step`` (may be
+    empty; checkpoints written before table support report [])."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return list(json.load(f).get("tables", []))
+
+
+def restore_table(ckpt_dir: str, step: int, name: str, spec,
+                  mesh: Optional[Any] = None):
+    """Revive the table image saved as ``name`` alongside step ``step``.
+
+    ``spec`` is the *target* :class:`repro.core.spec.TableSpec` — it may
+    differ from the spec the table was saved under (local → sharded,
+    N → M shards, resized pools): the image re-routes through the ordinary
+    directory math (see :mod:`repro.core.snapshot`). Returns a
+    ``repro.table_api.Table``."""
+    from repro.table_api import Table
+    path = os.path.join(ckpt_dir, f"step_{step}", f"table_{name}.npz")
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"no table image {name!r} at step {step} "
+            f"(have {table_names(ckpt_dir, step)})")
+    return Table.restore(path, spec, mesh)

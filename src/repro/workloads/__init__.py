@@ -14,7 +14,9 @@ differentially-checked scenario axis:
   sequential oracle in :mod:`repro.core.reference`;
 * :mod:`repro.workloads.scenarios` — the named scenario registry the tests
   and ``benchmarks/churn.py`` sweep (uniform / zipf / phased_drain /
-  mixed_churn, each for local and sharded placement).
+  mixed_churn / snapshot_restore, each for local and sharded placement;
+  ``snapshot_restore`` kills and revives the table mid-trace through a
+  durable image — see :mod:`repro.core.snapshot`).
 
 Everything is seed-deterministic: the same scenario name and seed produce
 bit-identical op streams on every host.

@@ -12,6 +12,15 @@ The replayer is the differential harness of the churn engine. Every step it
 3. samples the logical directory depth, counting increases and decreases —
    the externally observable trace of splits and merges.
 
+Phases whose name starts with ``snapshot_restore`` additionally **kill and
+revive the table** on entry: the live handle is serialized to a durable
+image on disk (``Table.save``), dropped, and restored (``Table.restore``,
+optionally under a different ``restore_spec`` — the elastic re-shard
+path), while the oracle runs uninterrupted. Every subsequent differential
+check is therefore parity evidence for the snapshot subsystem itself, and
+the depth trajectory after the revive proves the restored table still
+auto-splits and auto-merges.
+
 A final sweep looks up every key the trace ever touched and checks exact
 content parity. Mismatches raise :class:`ReplayMismatch` (or are collected
 when ``raise_on_mismatch=False``); the returned report carries depth
@@ -26,6 +35,7 @@ proves the table really did resize under the workload.
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Optional
 
@@ -60,17 +70,26 @@ def replay(
     lookup_chunk: int = 4096,
     raise_on_mismatch: bool = True,
     max_examples: int = 8,
+    restore_spec=None,
 ) -> dict:
     """Run ``trace`` through a fresh table built from ``spec``.
 
     ``check=False`` skips the oracle entirely (benchmark mode: no per-step
-    host sync beyond the ``depth_every`` sampling). Returns the report
-    dict described in the module docstring."""
+    host sync beyond the ``depth_every`` sampling). ``restore_spec``
+    (default: ``spec``) is the target spec for ``snapshot_restore`` phase
+    revives — pass a different one to re-shard mid-trace. Returns the
+    report dict described in the module docstring."""
+    import tempfile
+
     from repro.table_api import Table
 
     assert spec.value_schema is None, "replay drives the raw i32 value mode"
     table = Table.create(spec, mesh)
     ref: Optional[SeqExtHash] = _ref_for(spec) if check else None
+    snapshot_restores = 0
+    # revives rebuild the table with a clean error flag; accumulate the
+    # pre-revive flags so capacity saturation can never be laundered away
+    error_seen = False
 
     mutations = reads = steps = 0
     status_mismatches = content_mismatches = 0
@@ -118,6 +137,15 @@ def replay(
     for step in gen_steps(trace):
         if step.phase != cur_phase:
             flush_phase(step.phase)
+            if step.phase.startswith("snapshot_restore"):
+                # kill & revive: durable image round trip through disk,
+                # while the oracle (the surviving truth) runs uninterrupted
+                error_seen |= bool(np.asarray(table.state.error).any())
+                with tempfile.TemporaryDirectory() as td:
+                    path = table.save(os.path.join(td, "table.npz"))
+                    del table
+                    table = Table.restore(path, restore_spec or spec, mesh)
+                snapshot_restores += 1
         steps += 1
         phase_steps += 1
 
@@ -237,7 +265,8 @@ def replay(
             "decreases": decreases,
             "trajectory": depth_traj,
         },
-        "error_flag": bool(np.asarray(table.state.error).any()),
+        "error_flag": error_seen | bool(np.asarray(table.state.error).any()),
+        "snapshot_restores": snapshot_restores,
         "phases": phase_rows,
     }
     # a set error flag means the scenario saturated capacity (pool rows or

@@ -12,7 +12,13 @@ for either placement. The four classes map to the acceptance matrix:
   full elastic round trip (depth must rise, then *fall* — the first
   runtime exercise of the paper's §4.5 merge path);
 * ``mixed_churn``  — alternating growth/shrink bursts with skewed reads:
-  the resize-heavy regime where both policy directions fire repeatedly.
+  the resize-heavy regime where both policy directions fire repeatedly;
+* ``snapshot_restore`` — kills and revives the table twice mid-trace
+  through a durable on-disk image (phases named ``snapshot_restore*``
+  trigger the revive in the replayer): once at peak occupancy with growth
+  traffic after it, once followed by a drain — the revived table must
+  keep auto-splitting AND auto-merging, and every post-revive check is
+  differential parity evidence for the snapshot subsystem.
 
 Scenarios are deterministic in (name, placement, seed); ``scale`` stretches
 step counts for benchmark runs without touching the op stream's shape.
@@ -113,11 +119,25 @@ def _mixed_churn_trace() -> Tuple[Phase, ...]:
     )
 
 
+def _snapshot_restore_trace() -> Tuple[Phase, ...]:
+    return (
+        Phase("fill", 20, "fill", batch=_BATCH),
+        # revive #1 at peak occupancy (stable traffic over the image)
+        Phase("snapshot_restore", 8, "A", dist="uniform", batch=_BATCH),
+        Phase("grow", 10, "fill", batch=_BATCH),
+        # revive #2, then drain: post-revive auto-merges must fire
+        Phase("snapshot_restore2", 26, "drain", batch=_BATCH),
+        Phase("maintain", 10, "maintain", batch=_BATCH),
+        Phase("refill", 8, "fill", batch=_BATCH),
+    )
+
+
 _TRACES = {
     "uniform": _uniform_trace,
     "zipf": _zipf_trace,
     "phased_drain": _phased_drain_trace,
     "mixed_churn": _mixed_churn_trace,
+    "snapshot_restore": _snapshot_restore_trace,
 }
 
 SCENARIOS = tuple(sorted(_TRACES))

@@ -15,8 +15,9 @@ import numpy as np
 from repro.configs.archs import smoke_config
 from repro.models.model import decode_step, init_cache, init_params
 from repro.serving import kvcache as KV
-from repro.serving.engine import (EngineState, init_engine, make_paged_config,
-                                  serve_step)
+from repro.serving.engine import (EngineState, handover_engine, init_engine,
+                                  make_paged_config, save_engine, serve_step,
+                                  warm_start_engine)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -92,6 +93,66 @@ def test_eviction_frees_pages_and_mappings():
         est, _ = serve_step(cfg, pc, est, params)
     assert int(est.paged.page_alloc) == alloc_before  # served from free list
     assert not bool(est.paged.table.state.error)
+
+
+def test_engine_handover_and_warm_start(tmp_path):
+    """Drain-free handover: a successor engine under a bigger geometry
+    (larger batch, its own page-table spec) continues every live request
+    at its exact decode position — logits parity with the un-handed-over
+    engine; and the same via a durable on-disk image (warm start)."""
+    cfg, params, pc, est = setup(batch=4, max_len=40, page_size=8)
+    B = pc.batch
+    rng = np.random.default_rng(1)
+    st = KV.admit(pc, est.paged, jnp.ones(B, bool),
+                  jnp.arange(1, B + 1, dtype=jnp.int32))
+    est = EngineState(paged=st, tokens=jnp.asarray(
+        rng.integers(1, cfg.vocab_size, B), jnp.int32))
+    for _ in range(10):  # mid-page AND past a page boundary
+        est, _ = serve_step(cfg, pc, est, params)
+
+    pc_big = make_paged_config(cfg, batch=8, max_len=40, page_size=8)
+    est_big = handover_engine(pc, pc_big, est)
+    assert int(est_big.paged.table.size()) == int(est.paged.table.size())
+    assert (np.asarray(est_big.paged.lengths)[:B]
+            == np.asarray(est.paged.lengths)).all()
+    assert (np.asarray(est_big.paged.seq_ids)[B:] == -1).all()
+
+    save_engine(str(tmp_path / "img"), pc_big, est_big)
+    est_warm = warm_start_engine(pc_big, str(tmp_path / "img"))
+
+    for step in range(4):
+        est, l_ref = serve_step(cfg, pc, est, params)
+        est_big, l_big = serve_step(cfg, pc_big, est_big, params)
+        est_warm, l_warm = serve_step(cfg, pc_big, est_warm, params)
+        np.testing.assert_allclose(
+            np.asarray(l_big, np.float32)[:B],
+            np.asarray(l_ref, np.float32), rtol=2e-2, atol=2e-2,
+            err_msg=f"handover step {step}")
+        np.testing.assert_allclose(
+            np.asarray(l_warm, np.float32), np.asarray(l_big, np.float32),
+            rtol=2e-2, atol=2e-2, err_msg=f"warm start step {step}")
+    assert not bool(est_big.paged.table.state.error)
+
+    # infeasible targets are rejected on the host with a clear error
+    import dataclasses as dc
+    import pytest
+    with pytest.raises(ValueError, match="cannot change page_size"):
+        KV.handover(pc_big, est_big.paged,
+                    dc.replace(pc_big, page_size=16))
+    with pytest.raises(ValueError, match="slots are positional"):
+        KV.handover(pc_big, est_big.paged, dc.replace(pc_big, batch=2))
+    with pytest.raises(ValueError, match="grow n_pages"):
+        KV.handover(pc_big, est_big.paged, dc.replace(pc_big, n_pages=1))
+    # live sequences are 14 tokens deep: max_blocks=1 (8 tokens) truncates
+    with pytest.raises(ValueError, match="grow max_blocks"):
+        KV.handover(pc_big, est_big.paged, dc.replace(pc_big, max_blocks=1))
+    with pytest.raises(ValueError, match="cannot change dtype"):
+        KV.handover(pc_big, est_big.paged,
+                    dc.replace(pc_big, dtype="float32"))
+    # ...and restore checks against the SAVED geometry, not the target
+    with pytest.raises(ValueError, match="cannot change page_size"):
+        KV.restore_paged(dc.replace(pc_big, page_size=16),
+                         str(tmp_path / "img"))
 
 
 def test_page_table_directory_grows_with_live_set():

@@ -54,6 +54,48 @@ def test_checkpoint_roundtrip_and_resume(tmp_path):
                                    rtol=1e-6)
 
 
+def test_checkpoint_tables_alongside_params(tmp_path):
+    """WF-Ext tables checkpoint next to the model params in the same
+    atomic step dir and revive under a caller-chosen (possibly re-shaped)
+    spec — the table analogue of the elastic param restore."""
+    from repro.table_api import Table, TableSpec
+
+    cfg = smoke_config("smollm-135m")
+    state = init_train_state(cfg, jax.random.key(4))
+    spec = TableSpec(dmax=9, pool_size=256, n_lanes=16)
+    keys = np.arange(1, 200, dtype=np.int32)
+    t = Table.create(spec)
+    t, _ = t.insert(keys, keys * 2)
+
+    ck = str(tmp_path / "ck")
+    C.save(ck, 7, state, extra={"data_step": 7}, tables={"kv": t})
+    assert C.latest_step(ck) == 7
+    assert C.table_names(ck, 7) == ["kv"]
+
+    # params restore untouched by the table sidecar
+    restored, extra = C.restore(ck, 7, jax.eval_shape(lambda: state))
+    assert extra["data_step"] == 7
+
+    # table revives under a DIFFERENT sizing (elastic re-shard path)
+    t2 = C.restore_table(ck, 7, "kv",
+                         TableSpec(dmax=11, pool_size=512, n_lanes=16))
+    assert int(t2.size()) == len(keys)
+    found, vals = t2.lookup(keys)
+    assert np.asarray(found).all()
+    assert (np.asarray(vals) == keys * 2).all()
+
+    # unknown names fail with the available list
+    try:
+        C.restore_table(ck, 7, "nope", spec)
+        raise AssertionError("should have raised")
+    except FileNotFoundError as e:
+        assert "kv" in str(e)
+
+    # old checkpoints (no tables) keep loading and report none
+    C.save(ck, 8, state)
+    assert C.table_names(ck, 8) == []
+
+
 def test_checkpoint_crash_leaves_no_partial(tmp_path):
     """A .tmp dir (simulated mid-crash) must be invisible to latest_step."""
     cfg = smoke_config("smollm-135m")

@@ -23,7 +23,10 @@ import pytest
 HERE = os.path.abspath(__file__)
 
 # the scenario classes whose replay must show BOTH elastic directions
-CHURNY = ("phased_drain", "mixed_churn")
+CHURNY = ("phased_drain", "mixed_churn", "snapshot_restore")
+
+ALL_SCENARIOS = ("uniform", "zipf", "phased_drain", "mixed_churn",
+                 "snapshot_restore")
 
 
 def _assert_scenario_report(name: str, rep: dict) -> None:
@@ -36,6 +39,10 @@ def _assert_scenario_report(name: str, rep: dict) -> None:
     # as directory-depth increases, and the policy must have fired
     assert d["max"] > d["start"] and d["increases"] > 0, d
     assert rep["policy"]["splits"] > 0, rep["policy"]
+    # snapshot_restore kills/revives the table twice through a durable
+    # image; everything after a revive is snapshot-parity evidence
+    want_revives = 2 if name == "snapshot_restore" else 0
+    assert rep["snapshot_restores"] == want_revives, rep["snapshot_restores"]
     if name in CHURNY:
         # the elastic round trip: depth provably came back DOWN mid-trace
         # (only the §4.5 merge path can shrink the directory) and the
@@ -46,8 +53,7 @@ def _assert_scenario_report(name: str, rep: dict) -> None:
         assert rep["policy"]["merges"] > 0, rep["policy"]
 
 
-@pytest.mark.parametrize("name",
-                         ["uniform", "zipf", "phased_drain", "mixed_churn"])
+@pytest.mark.parametrize("name", list(ALL_SCENARIOS))
 def test_scenario_replay_parity_local(name):
     import jax
     jax.config.update("jax_platform_name", "cpu")
@@ -62,8 +68,7 @@ def test_scenario_registry_covers_matrix():
     from repro.workloads import SCENARIOS
     from repro.workloads.scenarios import scenario_matrix
 
-    assert set(SCENARIOS) == {"uniform", "zipf", "phased_drain",
-                              "mixed_churn"}
+    assert set(SCENARIOS) == set(ALL_SCENARIOS)
     assert all(v == ("local", "sharded")
                for v in scenario_matrix().values())
 
@@ -106,10 +111,10 @@ def test_scenario_replay_parity_sharded():
         os.path.join(os.path.dirname(HERE), "..", "src"))
     proc = subprocess.run(
         [sys.executable, HERE, "--run-sharded"],
-        env=env, capture_output=True, text=True, timeout=1800)
+        env=env, capture_output=True, text=True, timeout=2400)
     assert proc.returncode == 0, (proc.stdout[-3000:], proc.stderr[-3000:])
     reports = json.loads(proc.stdout.splitlines()[-1])
-    assert set(reports) == {"uniform", "zipf", "phased_drain", "mixed_churn"}
+    assert set(reports) == set(ALL_SCENARIOS)
     for name, rep in reports.items():
         assert rep["placement"] == "sharded"
         _assert_scenario_report(name, rep)

@@ -1,0 +1,112 @@
+"""Markdown link checker for the repo docs (no external dependencies).
+
+Verifies every ``[text](target)`` in the given markdown files:
+
+* relative file targets must exist on disk (resolved against the file's
+  directory; optional ``#fragment`` must match a heading slug in the
+  target file, GitHub-style);
+* same-file ``#fragment`` targets must match a heading slug;
+* ``http(s)://`` and ``mailto:`` targets are *not* fetched (CI must not
+  depend on the network) — they are only syntax-checked.
+
+Exit 1 listing every broken link. Used by the CI ``docs`` job:
+
+  python tools/check_links.py README.md DESIGN.md docs/*.md
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style heading → anchor slug."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def _headings(path: str) -> set:
+    counts: dict = {}
+    out = set()
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if _CODE_FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING.match(line)
+            if not m:
+                continue
+            s = _slug(m.group(1))
+            n = counts.get(s, 0)
+            counts[s] = n + 1
+            out.add(s if n == 0 else f"{s}-{n}")
+    return out
+
+
+def _links(path: str):
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if _CODE_FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK.finditer(line):
+                yield lineno, m.group(1)
+
+
+def check_file(path: str) -> list:
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    for lineno, target in _links(path):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        if target:
+            dest = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(dest):
+                errors.append(f"{path}:{lineno}: broken link -> {target}")
+                continue
+        else:
+            dest = os.path.abspath(path)
+        if frag is not None:
+            if not dest.endswith((".md", ".markdown")) or os.path.isdir(dest):
+                continue  # anchors into non-markdown targets: skip
+            if _slug(frag) not in _headings(dest):
+                rel = os.path.relpath(dest, base)
+                errors.append(f"{path}:{lineno}: broken anchor -> {rel}#{frag}")
+    return errors
+
+
+def main(argv: list) -> int:
+    if not argv:
+        sys.stderr.write("usage: check_links.py FILE.md [FILE.md ...]\n")
+        return 2
+    errors = []
+    checked = 0
+    for path in argv:
+        if not os.path.exists(path):
+            errors.append(f"{path}: file not found")
+            continue
+        errors.extend(check_file(path))
+        checked += 1
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"[check_links] {checked} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
