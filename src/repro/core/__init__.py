@@ -22,10 +22,10 @@ _TABLE_EXPORTS = (
     # transactions + helpers
     "init_table", "apply_batch", "lookup", "make_ops", "pad_ops",
     "insert_batch", "delete_batch", "table_size",
-    "freeze_buddies", "merge_buddies", "build_table_fns",
+    "freeze_buddies", "merge_buddies",
 )
 _SPEC_EXPORTS = ("TableSpec", "ValueField", "normalize_schema")
-_POLICY_EXPORTS = ("ResizePolicy", "apply_policy")
+_POLICY_EXPORTS = ("ResizePolicy", "apply_policy", "resize_pressure")
 _SNAPSHOT_EXPORTS = (
     "TableImage", "extract_image", "restore_from_image",
     "save_image", "load_image", "check_restorable",

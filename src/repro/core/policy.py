@@ -191,6 +191,41 @@ def apply_policy(cfg: T.TableConfig, policy: ResizePolicy,
     return st
 
 
+def resize_pressure(cfg: T.TableConfig, policy: ResizePolicy,
+                    st: T.TableState) -> jnp.ndarray:
+    """Imminent split/merge work as a fraction of live buckets (f32 scalar
+    in [0, 1]) — the serving tier's backpressure signal.
+
+    A bucket contributes pressure when the *next few ops* could force a
+    resize action on it:
+
+    * **split-imminent** — live, unfrozen, within one item of the high
+      watermark (``counts >= hi - 1``) and still deepenable — the very next
+      insert can trigger a proactive split (or, worse, an overflow round);
+    * **merge-eligible** — live, above ``min_depth``, at or below the low
+      watermark halved (``counts <= lo // 2``) — a per-bucket proxy for the
+      buddy-pair test (two such buddies combine to ``<= lo``).
+
+    Zero on an idle steady-state table, rising toward 1 as occupancy
+    crowds the watermarks. Pure elementwise/reduce math over the
+    incremental ``counts``, so it works unchanged on a stacked sharded
+    state (the fraction is then taken over all shards' live buckets).
+    The facade surfaces it via ``Table.policy_stats()["pressure"]`` and
+    :class:`repro.serving.router.Router` sheds or defers writes when it
+    runs high — resizing degrades latency gracefully instead of stalling
+    the queue.
+    """
+    hi, lo = policy.thresholds(cfg.bucket_size)
+    live = st.live            # trash row P is never live, so it drops out
+    split_near = live & ~st.frozen & (st.counts >= hi - 1) \
+        & (st.bdepth < cfg.dmax)
+    merge_near = live & (st.bdepth > policy.min_depth) \
+        & (st.counts <= lo // 2)
+    n_live = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
+    n_near = jnp.sum((split_near | merge_near).astype(jnp.int32))
+    return n_near.astype(jnp.float32) / n_live.astype(jnp.float32)
+
+
 def wrap_apply_fn(policy: ResizePolicy, apply_fn):
     """Compose ``apply_policy`` onto a per-placement combining transaction
     ``apply_fn(cfg, state, ops) -> (state, result)`` (the facade's single

@@ -145,6 +145,18 @@ class TableSpec:
     def n_shards(self) -> int:
         return 1 << self.shard_bits if self.placement == "sharded" else 1
 
+    def plan_batch(self, m: int) -> Tuple[int, int]:
+        """``(n_chunks, padded_len)`` the facade will dispatch for an
+        ``m``-op batch: NOP-padded to a whole number of ``n_lanes``-wide
+        combining transactions (0 chunks for an empty batch — the facade
+        short-circuits it). Dispatch cost is a staircase in ``m`` with one
+        step per chunk, which is exactly what the serving router's
+        measured cost model (``repro.serving.router.costmodel``) fits."""
+        if m <= 0:
+            return 0, 0
+        chunks = -(-m // self.n_lanes)
+        return chunks, chunks * self.n_lanes
+
     def table_config(self) -> "T.TableConfig":
         """The local-table config this spec resolves to.
 

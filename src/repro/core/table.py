@@ -869,56 +869,3 @@ def merge_buddies(cfg: TableConfig, state: TableState, parent_prefix, parent_dep
         counts=counts_m,
     )
     return st, ok
-
-
-def build_table_fns(cfg: TableConfig, *, use_kernels: bool | None = None,
-                    interpret: bool | None = None):
-    """Jitted closures over a static config (the public fast-path API).
-
-    ``use_kernels=None`` is backend-aware: on TPU the Pallas fused
-    route+probe lookup and grouped-combining apply kernels are the default
-    hot path; elsewhere the XLA single-pass transaction is (Pallas interpret
-    mode is a correctness device, not a fast path). Forcing
-    ``use_kernels=True`` off-TPU selects interpret mode automatically.
-
-    .. deprecated:: PR 2
-        The stringly-typed closure dict is superseded by the typed
-        :class:`repro.table_api.Table` facade
-        (``Table.create(TableSpec.from_config(cfg))``); this shim stays for
-        one deprecation cycle.
-    """
-    import warnings
-    warnings.warn(
-        "build_table_fns is deprecated; use repro.table_api.Table "
-        "(Table.create(TableSpec.from_config(cfg)))",
-        DeprecationWarning, stacklevel=2)
-    from repro.kernels import ops as kops  # deferred: kernels import table
-
-    if use_kernels is None:
-        use_kernels = kops.kernels_are_default()
-    if use_kernels:
-        lookup_fn = partial(kops.kernel_lookup, cfg, interpret=interpret)
-        apply_fn = partial(kops.apply_batch_kernel, cfg, interpret=interpret)
-
-        def ins(state, keys, values):
-            return apply_fn(state, make_ops(
-                cfg, state, jnp.full((cfg.n_lanes,), INS, jnp.int32), keys,
-                values))
-
-        def dele(state, keys):
-            return apply_fn(state, make_ops(
-                cfg, state, jnp.full((cfg.n_lanes,), DEL, jnp.int32), keys))
-    else:
-        lookup_fn = jax.jit(partial(lookup, cfg))
-        apply_fn = jax.jit(partial(apply_batch, cfg), donate_argnums=0)
-        ins = jax.jit(partial(insert_batch, cfg), donate_argnums=0)
-        dele = jax.jit(partial(delete_batch, cfg), donate_argnums=0)
-    return {
-        "init": partial(init_table, cfg),
-        "lookup": lookup_fn,
-        "apply_batch": apply_fn,
-        "insert_batch": ins,
-        "delete_batch": dele,
-        "merge_buddies": jax.jit(partial(merge_buddies, cfg), donate_argnums=0),
-        "size": jax.jit(table_size),
-    }

@@ -6,8 +6,8 @@ is the fast-path transaction: routing + kernel combiner, falling back to the
 table's split pass only when a bucket overflows — mirroring the paper's
 fast (ApplyWFOp) / slow (ResizeWF) structure.
 
-`table_lookup` / `table_apply` are the dispatching entry points the serving
-engine and `build_table_fns` use: kernels by default on TPU, the XLA
+`table_lookup` / `table_apply` are the dispatching entry points the facade's
+``auto`` backend resolves to: kernels by default on TPU, the XLA
 single-pass transaction elsewhere (Pallas interpret mode is a correctness
 tool, not a fast path). Tile shapes come from kernels/tuning.py.
 """

@@ -1,0 +1,150 @@
+"""Measured dispatch cost model per (placement, backend).
+
+The facade dispatches an m-op batch as ``ceil(m / n_lanes)`` combining
+transactions (``TableSpec.plan_batch``), so wall cost is a staircase
+
+    cost(m) ~= base_s + n_chunks(m) * chunk_s
+
+with ``base_s`` the fixed per-dispatch overhead (jit dispatch, host sync,
+result materialization) and ``chunk_s`` the marginal cost of one more
+n_lanes-wide transaction. Both depend heavily on where the table runs — a
+sharded shard_map transaction costs a different constant than a local XLA
+one, and Pallas kernels different again — so the model is **measured** on
+the live (placement, backend) pair, not assumed: :func:`measure_cost_model`
+times all-NOP transactions (content-transparent: they run the full
+announce/combine/install machinery and the resize policy's maintenance
+passes, but change no content) on a scratch table built from the same
+spec, and solves the two-point staircase for ``(base_s, chunk_s)``.
+
+The router uses the model for adaptive batching: ``batch_floor`` is the
+smallest batch that amortizes the fixed overhead down to a chosen slack
+over the asymptotic per-op cost — under load the router batches at least
+that much; with a shallow queue it dispatches early instead of idling
+requests against latency it cannot buy back.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """``cost(m) = base_s + ceil(m / n_lanes) * chunk_s`` (seconds)."""
+
+    base_s: float
+    chunk_s: float
+    n_lanes: int
+    source: str = "measured"     # "measured" | "default" | test stubs
+
+    def __post_init__(self):
+        assert self.base_s >= 0.0 and self.chunk_s > 0.0 and self.n_lanes > 0
+
+    def dispatch_cost(self, m: int) -> float:
+        """Predicted wall seconds for one m-op facade dispatch."""
+        if m <= 0:
+            return 0.0
+        chunks = -(-m // self.n_lanes)
+        return self.base_s + chunks * self.chunk_s
+
+    def per_op_cost(self, m: int) -> float:
+        return self.dispatch_cost(m) / m if m > 0 else float("inf")
+
+    def throughput_ops_s(self, m: int) -> float:
+        """Steady-state ops/s when every dispatch carries m ops."""
+        c = self.dispatch_cost(m)
+        return m / c if c > 0 else 0.0
+
+    def batch_floor(self, slack: float = 1.0) -> int:
+        """Smallest batch (a whole number of chunks) whose amortized fixed
+        overhead is within ``slack`` of the asymptotic per-op cost:
+        ``base_s / m <= slack * chunk_s / n_lanes``. The adaptive batcher
+        waits for at least this much work under load."""
+        assert slack > 0
+        m = self.base_s * self.n_lanes / (slack * self.chunk_s)
+        chunks = max(1, -(-int(np.ceil(m)) // self.n_lanes))
+        return chunks * self.n_lanes
+
+
+_CACHE: Dict[Tuple, CostModel] = {}
+
+
+def _cache_key(spec) -> Tuple:
+    return (spec.placement, spec.backend, spec.n_lanes, spec.bucket_size,
+            spec.pool_size, spec.dmax, spec.shard_bits,
+            spec.resize_policy is not None)
+
+
+def measure_cost_model(table, max_chunks: int = 8, repeats: int = 3,
+                       clock=time.perf_counter) -> CostModel:
+    """Fit ``(base_s, chunk_s)`` by timing real facade dispatches.
+
+    Times all-NOP ``apply`` batches (1 chunk vs ``max_chunks`` chunks) on
+    a **scratch table** built from the same spec/mesh — the measurement
+    shares the live table's jit cache (same spec => same compiled
+    executable) without perturbing its content or its policy counters.
+    Best-of-``repeats`` per point; the first call per batch shape pays
+    compilation and is excluded by a warmup round.
+    """
+    import jax
+
+    from repro.table_api import Table
+
+    spec = table.spec
+    scratch = Table.create(spec, table.mesh)
+    n = spec.n_lanes
+    sizes = (n, n * max(2, max_chunks))
+
+    def time_nop(m: int) -> float:
+        # three explicit operands: the exact arg structure the router
+        # dispatches with (vals=None jits a different entry point)
+        zeros = np.zeros(m, np.int32)
+        # warmup: compile + first-dispatch costs out of the measurement
+        t2, res = scratch.apply(zeros, zeros, zeros)
+        jax.block_until_ready(res.status)
+        best = float("inf")
+        for _ in range(max(1, repeats)):
+            t0 = clock()
+            t2, res = scratch.apply(zeros, zeros, zeros)
+            jax.block_until_ready(res.status)
+            best = min(best, clock() - t0)
+        return best
+
+    t_one = time_nop(sizes[0])
+    t_many = time_nop(sizes[1])
+    k_many = sizes[1] // n
+    chunk_s = max((t_many - t_one) / (k_many - 1), 1e-9)
+    base_s = max(t_one - chunk_s, 0.0)
+    return CostModel(base_s=base_s, chunk_s=chunk_s, n_lanes=n)
+
+
+def cost_model_for(table, use_cache: bool = True,
+                   **measure_kw) -> CostModel:
+    """Measured model for the table's (placement, backend), cached per
+    spec shape so routers over identical specs (tests, handover
+    successors) measure once per process."""
+    key = _cache_key(table.spec)
+    if use_cache and key in _CACHE:
+        return _CACHE[key]
+    model = measure_cost_model(table, **measure_kw)
+    if use_cache:
+        _CACHE[key] = model
+    return model
+
+
+def default_cost_model(n_lanes: int, base_s: float = 2e-4,
+                       chunk_s: float = 1e-4) -> CostModel:
+    """A deliberately unmeasured fallback (tests, dry runs)."""
+    return CostModel(base_s=base_s, chunk_s=chunk_s, n_lanes=n_lanes,
+                     source="default")
+
+
+__all__ = [
+    "CostModel",
+    "measure_cost_model",
+    "cost_model_for",
+    "default_cost_model",
+]

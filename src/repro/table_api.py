@@ -42,7 +42,6 @@ Example::
 """
 from __future__ import annotations
 
-import warnings
 from functools import partial
 
 import jax
@@ -51,7 +50,7 @@ import numpy as np
 
 from repro.core import dist as D
 from repro.core import table as T
-from repro.core.policy import ResizePolicy, wrap_apply_fn
+from repro.core.policy import ResizePolicy, resize_pressure, wrap_apply_fn
 from repro.core.spec import TableSpec, ValueField, normalize_schema  # noqa: F401 (re-export)
 from repro.core.table import NOP, INS, DEL, BatchResult, OpBatch
 # imported eagerly (not inside the dispatch functions): module import runs
@@ -216,12 +215,23 @@ class Table:
         return jnp.max(self.state.depth)
 
     def policy_stats(self):
-        """Cumulative elastic-policy actions as ``{"splits", "merges"}``
-        (summed over shards). Zeros when ``spec.resize_policy is None`` —
-        reactive overflow splits are deliberately not counted here."""
+        """Cumulative elastic-policy actions plus the live backpressure
+        signal, as ``{"splits", "merges", "pressure"}``.
+
+        ``splits``/``merges`` are summed over shards; reactive overflow
+        splits are deliberately not counted. ``pressure`` is
+        :func:`repro.core.policy.resize_pressure` — the fraction of live
+        buckets within reach of a watermark (f32 in [0, 1]), which the
+        serving router uses to shed/defer writes while resize work is
+        imminent. All three are zeros when ``spec.resize_policy is
+        None``."""
         totals = jnp.sum(jnp.reshape(self.state.policy_counts, (-1, 2)),
                          axis=0)
-        return {"splits": totals[0], "merges": totals[1]}
+        pol = self.spec.resize_policy
+        pressure = (resize_pressure(self.config, pol, self.state)
+                    if pol is not None else jnp.float32(0.0))
+        return {"splits": totals[0], "merges": totals[1],
+                "pressure": pressure}
 
     # -- updates (functional: return (table', BatchResult)) ----------------
 
@@ -456,6 +466,11 @@ def _apply_chunk(spec: TableSpec, mesh, carry, kinds, keys, values):
 def _apply_impl(table: Table, kinds, keys, values):
     spec, mesh = table.spec, table.mesh
     m = kinds.shape[0]
+    if m == 0:
+        # empty batch: no transaction, no seq tick, no spurious scan chunk
+        error = (table.state.error if spec.placement == "local"
+                 else table.state.error.any())
+        return table, BatchResult(status=jnp.zeros(0, jnp.int8), error=error)
     kinds, keys, values = _pad_lanes(spec, kinds, keys, values)
     n = spec.n_lanes
     k = kinds.shape[0] // n
@@ -486,6 +501,12 @@ def _lookup_impl(table: Table, queries):
     spec, mesh = table.spec, table.mesh
     queries = jnp.asarray(queries, jnp.int32)
     m = queries.shape[0]
+    if m == 0:
+        found = jnp.zeros(0, bool)
+        if spec.value_schema is None:
+            return found, jnp.zeros(0, jnp.int32)
+        return found, {f.name: jnp.zeros((0,) + f.shape, jnp.dtype(f.dtype))
+                       for f in spec.value_schema}
     q = queries
     if spec.placement == "sharded":
         pad = -m % spec.n_lanes     # divisible over the data axis
@@ -531,19 +552,3 @@ _apply_jit = jax.jit(_apply_checked)
 _lookup_jit = jax.jit(_lookup_impl)
 _insert_jit = jax.jit(_insert_impl)
 _delete_jit = jax.jit(_delete_impl)
-
-
-# ---------------------------------------------------------------------------
-# deprecated shim
-
-
-def build_table_fns(cfg: T.TableConfig, **kw):
-    """Deprecated alias of :func:`repro.core.table.build_table_fns`.
-
-    Prefer ``Table.create(TableSpec.from_config(cfg))``."""
-    warnings.warn(
-        "build_table_fns is deprecated; use repro.table_api.Table",
-        DeprecationWarning, stacklevel=2)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return T.build_table_fns(cfg, **kw)

@@ -12,6 +12,10 @@ differentially-checked scenario axis:
   :class:`repro.table_api.Table` facade and differentially checks every
   result batch (and periodic content probes) against the paper-literal
   sequential oracle in :mod:`repro.core.reference`;
+* :mod:`repro.workloads.serving_driver` — the closed-loop multi-client
+  driver for the serving router (:mod:`repro.serving.router`): n clients
+  with one request in flight each, differential parity in the router's
+  linearization order, optional mid-trace rolling-upgrade handover;
 * :mod:`repro.workloads.scenarios` — the named scenario registry the tests
   and ``benchmarks/churn.py`` sweep (uniform / zipf / phased_drain /
   mixed_churn / snapshot_restore, each for local and sharded placement;
@@ -25,6 +29,7 @@ bit-identical op streams on every host.
 from repro.workloads.generators import OpMix, YCSB_MIXES
 from repro.workloads.replay import ReplayMismatch, replay
 from repro.workloads.scenarios import SCENARIOS, get_scenario
+from repro.workloads.serving_driver import serve_closed_loop
 from repro.workloads.trace import Phase, Trace
 
 __all__ = [
@@ -36,4 +41,5 @@ __all__ = [
     "ReplayMismatch",
     "SCENARIOS",
     "get_scenario",
+    "serve_closed_loop",
 ]

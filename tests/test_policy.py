@@ -15,8 +15,16 @@ Layers:
      content (exact parity through the freeze window);
   4. randomized property (hypothesis or shim): arbitrary op streams through
      a policy-active facade keep every structural invariant and full
-     content/status parity with the oracle.
+     content/status parity with the oracle;
+  5. policy observability under sharded placement (subprocess, 8 forced
+     host devices): `policy_stats()` sums splits/merges over the stacked
+     shard states, `resize_pressure` works elementwise on them, and
+     `Table.depth()` reports the max over shards.
 """
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -260,3 +268,67 @@ def test_policy_random_ops_keep_invariants_and_parity(data):
         assert np.asarray(res.status).tolist() == want
         check_invariants(t.config, t.state)
         assert to_dict(t.config, t.state) == ref.as_dict()
+
+
+# ---------------------------------------------------------------------------
+# 5. policy observability under sharded placement (subprocess: 8 devices)
+
+
+HERE = os.path.abspath(__file__)
+
+
+def test_policy_stats_and_depth_sharded():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(HERE), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, HERE, "--run-sharded"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (proc.stdout[-3000:], proc.stderr[-3000:])
+    assert "sharded policy stats OK" in proc.stdout
+
+
+def _sharded_main():
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    pol = ResizePolicy(split_watermark=0.75, merge_watermark=0.375,
+                       max_splits=8, max_merges=4)
+    spec = TableSpec(dmax=8, bucket_size=8, pool_size=256, n_lanes=16,
+                     placement="sharded", shard_bits=1, resize_policy=pol)
+    t = Table.create(spec, mesh)
+
+    # fresh table: zero counters, zero pressure, initial depth
+    s0 = t.policy_stats()
+    assert int(s0["splits"]) == 0 and int(s0["merges"]) == 0
+    assert float(np.asarray(s0["pressure"])) == 0.0
+    d0 = int(t.depth())
+
+    # fill enough to drive proactive splits on BOTH shard states; the
+    # stats must be the sum over the stacked shard axis and depth the max
+    rng = np.random.default_rng(3)
+    keys = rng.choice(np.arange(1, 1 << 20), size=400,
+                      replace=False).astype(np.int32)
+    t, res = t.insert(keys, keys * 3)
+    assert (np.asarray(res.status) == 1).all()
+    s1 = t.policy_stats()
+    per_shard = np.asarray(t.state.policy_counts).reshape(-1, 2)
+    assert per_shard.shape[0] == spec.n_shards == 2
+    assert (per_shard[:, 0] > 0).all(), "every shard should have split"
+    assert int(s1["splits"]) == int(per_shard[:, 0].sum())
+    assert int(s1["merges"]) == int(per_shard[:, 1].sum())
+    assert int(t.depth()) == int(np.asarray(t.state.depth).max()) > d0
+
+    # pressure: a float in [0, 1] computed elementwise over shard states;
+    # draining most of the table pushes merge-eligibility up
+    p1 = float(np.asarray(s1["pressure"]))
+    assert 0.0 <= p1 <= 1.0
+    t, _ = t.delete(keys[:380])
+    p2 = float(np.asarray(t.policy_stats()["pressure"]))
+    assert 0.0 <= p2 <= 1.0 and p2 > p1, (p1, p2)
+    print("sharded policy stats OK")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--run-sharded" in sys.argv:
+        sys.exit(_sharded_main())

@@ -8,13 +8,13 @@ that are NOT multiples of n_lanes. Sharded combos run in a subprocess with
 8 forced host devices (device count is process-global).
 
 Also covers the `make_ops` shape-validation satellite (short/over-length
-batches raise; `pad_ops` NOP-fills) and the `build_table_fns` deprecation
-shim.
+batches raise; `pad_ops` NOP-fills) and the degenerate batch lengths the
+serving router leans on (empty and length-1 batches round-trip without a
+spurious scan chunk).
 """
 import os
 import subprocess
 import sys
-import warnings
 
 import numpy as np
 import pytest
@@ -148,24 +148,57 @@ def test_make_ops_validates_shapes():
         T.pad_ops(cfg, over, jnp.arange(9, dtype=jnp.int32))
 
 
-def test_build_table_fns_deprecated_but_works():
+def test_batch_edge_lengths():
+    """Empty and length-1 batches: the degenerate shapes the serving
+    router's variable-length dispatch leans on. Empty batches must
+    round-trip without dispatching a spurious scan chunk (no seq tick, no
+    state change); length-1 batches pad to exactly one chunk."""
     import jax
     jax.config.update("jax_platform_name", "cpu")
-    import jax.numpy as jnp
-    from repro.core import table as T
+    from repro.table_api import Table, TableSpec
 
-    cfg = T.TableConfig(dmax=6, bucket_size=4, pool_size=64, n_lanes=8)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        fns = T.build_table_fns(cfg, use_kernels=False)
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    state = fns["init"]()
-    keys = jnp.arange(1, 9, dtype=jnp.int32)
-    state, res = fns["insert_batch"](state, keys, keys * 2)
-    assert (np.asarray(res.status) == 1).all()
-    found, vals = fns["lookup"](state, keys)
-    assert np.asarray(found).all()
-    assert (np.asarray(vals) == np.asarray(keys) * 2).all()
+    spec = TableSpec(dmax=6, bucket_size=4, pool_size=64, n_lanes=8)
+    assert spec.plan_batch(0) == (0, 0)
+    assert spec.plan_batch(1) == (1, 8)
+    assert spec.plan_batch(8) == (1, 8)
+    assert spec.plan_batch(9) == (2, 16)
+    t = Table.create(spec)
+
+    # empty apply: status (0,), no transaction dispatched
+    empty = np.zeros(0, np.int32)
+    seq0 = np.asarray(t.state.applied_seq).copy()
+    t, res = t.apply(empty, empty, empty)
+    assert res.status.shape == (0,)
+    assert not bool(res.error)
+    assert (np.asarray(t.state.applied_seq) == seq0).all()
+    t2, res = t.insert(empty, empty)
+    assert res.status.shape == (0,)
+    assert (np.asarray(t2.state.applied_seq) == seq0).all()
+
+    # empty lookup: (0,) found and values, no error
+    found, vals = t.lookup(empty)
+    assert found.shape == (0,) and vals.shape == (0,)
+
+    # length-1 batches: one chunk, correct result, size tracks
+    t, res = t.insert(np.asarray([42], np.int32), np.asarray([7], np.int32))
+    assert res.status.shape == (1,) and int(np.asarray(res.status)[0]) == 1
+    assert int(t.size()) == 1
+    found, vals = t.lookup(np.asarray([42], np.int32))
+    assert bool(np.asarray(found)[0]) and int(np.asarray(vals)[0]) == 7
+    t, res = t.delete(np.asarray([42], np.int32))
+    assert res.status.shape == (1,) and int(np.asarray(res.status)[0]) == 1
+    assert int(t.size()) == 0
+
+    # empty batch with a pytree value schema: schema-shaped empty leaves
+    import jax.numpy as jnp
+    sspec = TableSpec(dmax=6, bucket_size=4, pool_size=64, n_lanes=8,
+                      value_schema={"page": jnp.int32,
+                                    "score": (jnp.float32, (2,))})
+    ts = Table.create(sspec)
+    found, vals = ts.lookup(empty)
+    assert found.shape == (0,)
+    assert vals["page"].shape == (0,)
+    assert vals["score"].shape == (0, 2)
 
 
 def test_frozen_upsert_preserves_payload():
