@@ -1,0 +1,161 @@
+"""Apply-path kernel sweep: XLA single-pass vs grouped vs fused Pallas.
+
+One write-heavy grid in the fig7/8 style — per (pool_size, bucket_size,
+n_lanes) cell, time a full combining transaction through each of the three
+apply executables the plan layer can dispatch:
+
+  xla      — the reference single-pass transaction (table.apply_batch)
+  grouped  — the chunk-streaming Pallas kernel (apply_batch_kernel)
+  fused    — the single-launch fused kernel (apply_batch_fused)
+
+and model each path's HBM traffic analytically. Wall time tells the truth
+only for the backend it ran on: on the CPU container the Pallas rows run
+in *interpret mode* (the kernel body executes in Python), so their
+absolute times measure the interpreter, not the machine. The traffic
+model is backend-independent and is the fused kernel's actual claim:
+
+  xla / grouped   read + write the whole pool        ~ 16*(P+1)*B bytes
+  fused           moves only the routed bucket rows  ~ 16*n*B
+                  + the directory and frozen vector once into VMEM
+
+so the pool term shrinks by ~P/n (e.g. 64x at P=4096, n=64). Rows:
+
+  kernels/apply/P{P}/B{B}/n{n}/{path}   us_per_call + Mops (measured)
+  kernels/model/P{P}/B{B}/n{n}/{path}   modeled KiB moved per transaction
+  kernels/model/.../fused_speedup       modeled traffic ratio vs grouped
+
+Usage:  python -m benchmarks.kernels [--full] [--out BENCH_kernels.json]
+(also registered as table "kernels" in benchmarks.run / bench_gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _grid(full: bool):
+    # (pool_size, bucket_size, n_lanes); write-only op mix (paper fig 7's
+    # 0%-lookup column is where the apply path is the whole story)
+    if full:
+        return [(1024, 8, 16), (1024, 8, 64), (4096, 8, 64),
+                (4096, 8, 128), (16384, 8, 128)]
+    return [(256, 8, 16), (1024, 8, 64)]
+
+
+def modeled_bytes(P: int, B: int, n: int, dmax: int) -> dict:
+    """Analytic HBM words moved per transaction (4-byte words; keys+vals,
+    read+write for the pool terms)."""
+    pool = 16 * (P + 1) * B
+    return {
+        "xla": pool,
+        "grouped": pool,
+        "fused": 16 * n * B + 4 * (1 << dmax) + 4 * (P + 1),
+    }
+
+
+def sweep(full: bool = False, iters: int = 5):
+    import jax
+    import numpy as np
+    from functools import partial
+
+    from repro.core import table as T
+    from repro.kernels import ops as kops
+
+    interpret = jax.default_backend() != "tpu"
+    tag = "interpret" if interpret else "tpu"
+    rows = []
+    for P, B, n in _grid(full):
+        dmax = max(8, (P - 1).bit_length())
+        cfg = T.TableConfig(dmax=dmax, bucket_size=B, pool_size=P,
+                            n_lanes=n)
+        rng = np.random.default_rng(P + n)
+        state0 = T.init_table(cfg)
+        # pre-split the directory so routing fans out across the pool
+        seed = rng.choice(np.arange(1, 1 << 20), size=4 * n, replace=False)
+        for i in range(0, seed.size, n):
+            ops = T.make_ops(cfg, state0, np.full(n, T.INS, np.int32),
+                             seed[i:i + n].astype(np.int32),
+                             seed[i:i + n].astype(np.int32))
+            state0, _ = T.apply_batch(cfg, state0, ops)
+        keys = rng.choice(np.arange(1 << 20, 1 << 21), size=n,
+                          replace=False).astype(np.int32)
+        ops = T.make_ops(cfg, state0, np.full(n, T.INS, np.int32),
+                         keys, keys)
+
+        paths = {
+            "xla": jax.jit(partial(T.apply_batch, cfg)),
+            "grouped": partial(kops.apply_batch_kernel, cfg,
+                               interpret=interpret),
+            "fused": partial(kops.apply_batch_fused, cfg,
+                             interpret=interpret),
+        }
+        for name, fn in paths.items():
+            def run():
+                # donation-safe: every call gets its own state copy
+                st = jax.tree.map(jax.numpy.copy, state0)
+                st2, res = fn(st, ops)
+                jax.block_until_ready(res.status)
+
+            try:
+                run()   # warmup/compile
+                best = float("inf")
+                for _ in range(max(1, iters)):
+                    t0 = time.perf_counter()
+                    run()
+                    best = min(best, time.perf_counter() - t0)
+            except Exception as e:  # noqa: BLE001 — a path outside its
+                rows.append((f"kernels/apply/P{P}/B{B}/n{n}/{name}", 0.0,
+                             f"ERROR:{type(e).__name__}"))  # guards loses
+                continue
+            mops = n / best / 1e6
+            backend = "xla" if name == "xla" else tag
+            rows.append((f"kernels/apply/P{P}/B{B}/n{n}/{name}",
+                         best * 1e6, f"{mops:.3f}Mops;backend={backend}"))
+
+        model = modeled_bytes(P, B, n, dmax)
+        for name, nbytes in model.items():
+            rows.append((f"kernels/model/P{P}/B{B}/n{n}/{name}",
+                         0.0, f"{nbytes / 1024:.1f}KiB_per_txn"))
+        rows.append((f"kernels/model/P{P}/B{B}/n{n}/fused_speedup", 0.0,
+                     f"{model['grouped'] / model['fused']:.1f}x_traffic"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="alias for the default reduced grid")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--out", default=None,
+                    help="also write rows as JSON (BENCH_kernels.json)")
+    args = ap.parse_args()
+
+    rows = sweep(full=args.full and not args.fast, iters=args.iters)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+    if args.out:
+        rec = {}
+        for name, us, derived in rows:
+            entry = {"us_per_call": round(us, 2), "derived": derived}
+            if "Mops" in derived:
+                entry["mops"] = float(derived.split("Mops")[0].split(";")[-1])
+            rec[name] = entry
+        with open(args.out, "w") as f:
+            json.dump({"tables": ["kernels"], "rows": rec}, f, indent=2,
+                      sort_keys=True)
+            f.write("\n")
+        print(f"[kernels] wrote {len(rec)} rows to {args.out}")
+
+    # the fused kernel's reason to exist: strictly less modeled traffic
+    bad = [n for n, _, d in rows
+           if n.endswith("fused_speedup") and float(d.split("x")[0]) <= 1.0]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

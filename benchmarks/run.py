@@ -78,8 +78,16 @@ def roofline_summary(full=False):
     return rows
 
 
+def kernels_apply_paths(full=False):
+    """Apply-path executables sweep (benchmarks.kernels): XLA single-pass
+    vs grouped vs fused Pallas kernels + the analytic traffic model."""
+    from benchmarks.kernels import sweep
+    return sweep(full=full)
+
+
 TABLES = {
     "fig7_8": fig7_8_directory_stable,
+    "kernels": kernels_apply_paths,
     "fig9": fig9_large_table,
     "fig10a": fig10a_resize_growth,
     "fig10b": fig10b_amortized,

@@ -61,17 +61,26 @@ def _dest_shard(cfg: DistConfig, keys):
 
 
 def dist_apply_batch(cfg: DistConfig, mesh, state, ops: T.OpBatch, *,
-                     apply_fn=None):
+                     apply_fn=None, plan=None):
     """One distributed combining transaction.
 
     state: stacked TableState sharded P(model); ops: OpBatch sharded
     P(data). Returns (state', BatchResult sharded P(data)).
 
     ``apply_fn(local_cfg, state, ops)`` is the per-shard combining
-    transaction (default: the XLA single-pass ``table.apply_batch``); the
-    Table facade routes the Pallas / interpret backends through it."""
+    transaction (default: the XLA single-pass ``table.apply_batch``).
+    Alternatively pass a resolved :class:`~repro.kernels.plan.KernelPlan`
+    as ``plan`` — the per-shard transaction then runs the plan's kernels
+    (fused apply where eligible) inside the shard_map body; the Table
+    facade threads its spec's plan through here."""
     if apply_fn is None:
-        apply_fn = T.apply_batch
+        if plan is not None:
+            from functools import partial
+
+            from repro.kernels import ops as kops
+            apply_fn = partial(kops.plan_apply, plan)
+        else:
+            apply_fn = T.apply_batch
 
     def body(state_blk, ops_blk):
         # squeeze the per-device shard (model axis block size 1)
@@ -114,13 +123,21 @@ def dist_apply_batch(cfg: DistConfig, mesh, state, ops: T.OpBatch, *,
     return fn(state, ops)
 
 
-def dist_lookup(cfg: DistConfig, mesh, state, queries, *, lookup_fn=None):
+def dist_lookup(cfg: DistConfig, mesh, state, queries, *, lookup_fn=None,
+                plan=None):
     """Rule-A distributed lookup: local gather + masked psum combine.
 
     ``lookup_fn(local_cfg, state, queries)`` is the per-shard probe
-    (default: the XLA gather ``table.lookup``)."""
+    (default: the XLA gather ``table.lookup``); a resolved ``plan`` routes
+    it through the plan's kernels instead (see :func:`dist_apply_batch`)."""
     if lookup_fn is None:
-        lookup_fn = T.lookup
+        if plan is not None:
+            from functools import partial
+
+            from repro.kernels import ops as kops
+            lookup_fn = partial(kops.plan_lookup, plan)
+        else:
+            lookup_fn = T.lookup
 
     def body(state_blk, q_blk):
         st = jax.tree.map(lambda x: x[0], state_blk)

@@ -107,6 +107,7 @@ class TableSpec:
 
     # --- backend ---------------------------------------------------------
     backend: str = "auto"        # "auto" | "xla" | "pallas" | "interpret"
+    autotune: str = "off"        # "off" | "measured" tile sweep (plan layer)
 
     # --- value schema ----------------------------------------------------
     value_schema: Optional[Tuple[ValueField, ...]] = None
@@ -132,6 +133,20 @@ class TableSpec:
             raise ValueError("slab_capacity given without a value_schema")
         # construction-time validation of the core knobs
         self.table_config()
+        # resolve the kernel execution plan ONCE, here: env overrides
+        # (REPRO_FORCE_INTERPRET, REPRO_TILE_*, REPRO_AUTOTUNE, ...) are
+        # read at construction and never again — a live table's dispatch
+        # is immutable and inspectable via Table.plan(). The plan is a
+        # cached derived view, not a field: it never enters spec
+        # equality/hash (dataclasses.replace and snapshot round trips
+        # re-resolve it for the new construction environment).
+        from repro.kernels.plan import resolve_plan
+        object.__setattr__(self, "_plan", resolve_plan(self))
+
+    def plan(self):
+        """The :class:`~repro.kernels.plan.KernelPlan` this spec resolved
+        to at construction (hashable jit-static metadata)."""
+        return self._plan
 
     # --- derived views ---------------------------------------------------
 

@@ -10,10 +10,11 @@ import jax.numpy as jnp
 
 EMPTY_KEY = jnp.int32(-2147483648)
 
-# status codes shared with the apply kernel
+# status codes shared with the apply kernels
 ST_IDLE = -1
 ST_FALSE = 0
 ST_TRUE = 1
+ST_FROZEN = -2  # op routed to a frozen bucket (== table.FROZEN; fused kernel)
 ST_FULL = -3   # op hit a full bucket → outer split pass takes over
 
 
@@ -79,3 +80,65 @@ def apply_ref(kinds: jnp.ndarray, keys: jnp.ndarray, values: jnp.ndarray,
     M = kinds.shape[0]
     status = jnp.full(M, ST_IDLE, jnp.int8)
     return jax.lax.fori_loop(0, M, body, (pool_keys, pool_vals, status))
+
+
+def fused_apply_ref(directory: jnp.ndarray, frozen: jnp.ndarray,
+                    kinds: jnp.ndarray, keys: jnp.ndarray,
+                    values: jnp.ndarray, pool_keys: jnp.ndarray,
+                    pool_vals: jnp.ndarray, *, dmax: int,
+                    hash_name: str = "fmix32", hash_shift: int = 0):
+    """Oracle for the fully-fused apply kernel (kernels/apply.py).
+
+    Routes each op through the directory (hash → top-dmax bits → bucket),
+    blocks frozen destinations with ST_FROZEN and full buckets with
+    ST_FULL, and otherwise applies ops **in lane order** — which equals the
+    (bucket, lane) linearization because ops on distinct buckets commute
+    (design rule B). Pools are [P+1, B] including the write-trash row; the
+    trash row's content is unspecified (compare live rows only).
+
+    Returns (pool_keys', pool_vals', status i32[N], bucket_ids i32[N]).
+    """
+    from repro.core.hashing import HASH_FNS
+
+    h = HASH_FNS[hash_name](keys)
+    if hash_shift:
+        h = h << hash_shift
+    e = (h >> jnp.uint32(32 - dmax)).astype(jnp.int32)
+    bids = directory[e]
+
+    def body(i, carry):
+        pk, pv, status = carry
+        kind = kinds[i]
+        b = bids[i]
+        row_k = pk[b]
+        row_v = pv[b]
+        occ = row_k != EMPTY_KEY
+        full = occ.all()
+        frz = frozen[b]
+        eq = row_k == keys[i]
+        exist = eq.any()
+        slot_eq = jnp.argmax(eq)
+        slot_free = jnp.argmax(~occ)
+        active = ((kind == 1) | (kind == 2)) & ~frz
+        is_ins = active & (kind == 1)
+        blocked = active & full
+        do_write = active & ~full & (is_ins | exist)
+        slot = jnp.where(is_ins, jnp.where(exist, slot_eq, slot_free),
+                         slot_eq)
+        nk = jnp.where(is_ins, keys[i], EMPTY_KEY)
+        nv = jnp.where(is_ins, values[i], 0)
+        pk = pk.at[b, slot].set(jnp.where(do_write, nk, row_k[slot]))
+        pv = pv.at[b, slot].set(jnp.where(do_write, nv, row_v[slot]))
+        s = jnp.where(is_ins, (~exist).astype(jnp.int32),
+                      exist.astype(jnp.int32))
+        s = jnp.where(blocked, ST_FULL, s)
+        s = jnp.where((kind != 0) & ~active, ST_FROZEN, s)
+        s = jnp.where(kind == 0, ST_IDLE, s)
+        status = status.at[i].set(s)
+        return pk, pv, status
+
+    n = kinds.shape[0]
+    status = jnp.full(n, ST_IDLE, jnp.int32)
+    pk, pv, status = jax.lax.fori_loop(
+        0, n, body, (pool_keys, pool_vals, status))
+    return pk, pv, status, bids

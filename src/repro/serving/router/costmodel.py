@@ -73,9 +73,13 @@ _CACHE: Dict[Tuple, CostModel] = {}
 
 
 def _cache_key(spec) -> Tuple:
-    return (spec.placement, spec.backend, spec.n_lanes, spec.bucket_size,
+    # keyed on the RESOLVED KernelPlan, not the requested backend string:
+    # a plan change (e.g. the fused apply kernel toggling on, new measured
+    # tiles) is a different executable and must be re-measured — the
+    # requested "auto" tells us nothing about what actually dispatches
+    return (spec.placement, spec.n_lanes, spec.bucket_size,
             spec.pool_size, spec.dmax, spec.shard_bits,
-            spec.resize_policy is not None)
+            spec.resize_policy is not None, spec.plan())
 
 
 def measure_cost_model(table, max_chunks: int = 8, repeats: int = 3,

@@ -68,25 +68,28 @@ __all__ = [
 
 
 def _local_fns(spec: TableSpec):
-    """(lookup_fn, apply_fn) for the spec's backend, each (cfg, state, x).
+    """(lookup_fn, apply_fn) for the spec's **plan**, each (cfg, state, x).
 
-    ===========  =====================================================
-    backend      resolves to
-    ===========  =====================================================
-    xla          ``table.lookup`` / ``table.apply_batch`` (single-pass)
-    pallas       Pallas kernels, compiled on TPU, interpret elsewhere
-    interpret    Pallas kernels, forced interpret mode (correctness)
-    auto         kernels on TPU, XLA single-pass everywhere else
-    ===========  =====================================================
+    The spec resolved its :class:`~repro.kernels.plan.KernelPlan` once at
+    construction (backend, fused-kernel selection, tile shapes, interpret
+    override — env vars applied there and nowhere else); dispatch here is
+    a pure function of that plan:
+
+    ==============  ====================================================
+    plan.backend    resolves to
+    ==============  ====================================================
+    xla             ``table.lookup`` / ``table.apply_batch`` (single-pass)
+    pallas          Pallas kernels: the fully-fused apply + fused probe
+                    where ``plan.fused_apply`` / ``plan.fused_lookup``
+                    allow, grouped/unfused kernels beyond those bounds;
+                    compiled on TPU, interpret mode elsewhere
+    ==============  ====================================================
     """
-    if spec.backend == "xla":
+    plan = spec.plan()
+    if plan.backend == "xla":
         return T.lookup, T.apply_batch
-    if spec.backend == "interpret":
-        return (partial(kops.kernel_lookup, interpret=True),
-                partial(kops.apply_batch_kernel, interpret=True))
-    if spec.backend == "pallas":
-        return kops.kernel_lookup, kops.apply_batch_kernel
-    return kops.table_lookup, kops.table_apply          # auto
+    return (partial(kops.plan_lookup, plan),
+            partial(kops.plan_apply, plan))
 
 
 def _raw_lookup(spec: TableSpec, mesh, state, queries):
@@ -148,6 +151,14 @@ class Table:
         return (f"Table(placement={self.spec.placement}, "
                 f"backend={self.spec.backend}, dmax={self.spec.dmax}, "
                 f"n_lanes={self.spec.n_lanes}, values={fields})")
+
+    def plan(self):
+        """The resolved :class:`~repro.kernels.plan.KernelPlan` this table
+        dispatches with — backend, fused-kernel selection, tile shapes,
+        interpret mode, autotune provenance. Resolved once at spec
+        construction; environment changes after that do not affect a live
+        table."""
+        return self.spec.plan()
 
     # -- construction ------------------------------------------------------
 

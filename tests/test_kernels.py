@@ -121,14 +121,32 @@ def test_fused_probe_matches_unfused_route(dmax, P, B, N, hash_name, shift):
 
 
 def test_tile_tuning_env_and_registry(monkeypatch):
+    import pytest
+
     from repro.kernels import tuning
 
     t = tuning.pick_tiles(1000, 300, 64)
     assert t.tq <= 256 and t.pc <= 300 and t.dc <= 64
-    tuning.register_tiles("k1", tuning.TileConfig(tq=32, pc=64, dc=16))
-    assert tuning.pick_tiles(1000, 1000, 0, key="k1").tq == 32
+    key = tuning.tile_key("lookup", dmax=6, pool_size=1000, n_lanes=64)
+    tuning.register_tiles(key, tuning.TileConfig(tq=32, pc=64, dc=16),
+                          override=True)
+    assert tuning.pick_tiles(1000, 1000, 0, key=key).tq == 32
     monkeypatch.setenv("REPRO_TILE_TQ", "8")
-    assert tuning.pick_tiles(1000, 1000, 0, key="k1").tq == 8  # env wins
+    assert tuning.pick_tiles(1000, 1000, 0, key=key).tq == 8  # env wins
+    monkeypatch.delenv("REPRO_TILE_TQ")
+    # keys outside the plan schema are rejected, not silently accepted
+    with pytest.raises(ValueError, match="plan schema"):
+        tuning.register_tiles("k1", tuning.TileConfig())
+    with pytest.raises(ValueError, match="plan schema"):
+        tuning.pick_tiles(64, 64, key="free-form")
+    # colliding re-registration (different tiles, same key) raises ...
+    with pytest.raises(ValueError, match="collision"):
+        tuning.register_tiles(key, tuning.TileConfig(tq=8, pc=8, dc=8))
+    # ... but idempotent and explicit-override writes are fine
+    tuning.register_tiles(key, tuning.TileConfig(tq=32, pc=64, dc=16))
+    tuning.register_tiles(key, tuning.TileConfig(tq=8, pc=8, dc=8),
+                          override=True)
+    assert tuning.pick_tiles(1000, 1000, 0, key=key).tq == 8
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +224,127 @@ def test_apply_hypothesis(data):
 
 
 # ---------------------------------------------------------------------------
+# fully-fused apply kernel: route + probe + combine + scatter, one launch
+
+
+def random_fused_case(rng, dmax, P, B, n, fill=0.6, ins_frac=None,
+                      frozen_frac=0.25, key_lo=1, key_hi=64):
+    """Directory, frozen mask, [P+1, B] pools and one op batch.
+
+    The directory is an arbitrary map entry -> live row (the kernel only
+    follows it); keys are drawn from a small range so intra-batch
+    duplicates and genuine hits are common; ~frozen_frac of the live rows
+    are frozen; fill near 1.0 yields full buckets (ST_FULL coverage)."""
+    directory = jnp.asarray(rng.integers(0, P, size=1 << dmax), jnp.int32)
+    frozen = np.zeros(P + 1, bool)
+    frozen[:P] = rng.random(P) < frozen_frac
+    pk, pv = random_pool(rng, P + 1, B, fill)
+    if ins_frac is None:
+        kinds = rng.integers(0, 3, size=n).astype(np.int32)
+    else:
+        kinds = np.where(rng.random(n) < ins_frac, 1, 2).astype(np.int32)
+    keys = rng.integers(key_lo, key_hi, size=n).astype(np.int32)
+    values = rng.integers(0, 1 << 15, size=n).astype(np.int32)
+    return (directory, jnp.asarray(frozen), jnp.asarray(kinds),
+            jnp.asarray(keys), jnp.asarray(values), pk, pv)
+
+
+def assert_fused_matches_ref(directory, frozen, kinds, keys, values, pk, pv,
+                             *, dmax, rounds=2, rng=None):
+    """Run `rounds` sequential batches through kernel and oracle, carrying
+    the pools forward, so later rounds hit keys earlier rounds inserted.
+    Live rows, status and bucket ids must match exactly; the trash row
+    (row P) is unspecified by contract and excluded."""
+    from repro.kernels.apply import fused_apply
+
+    P = pk.shape[0] - 1
+    pk_k, pv_k = pk, pv
+    pk_r, pv_r = pk, pv
+    for r in range(rounds):
+        if r and rng is not None:   # fresh ops over the same key range
+            kinds = jnp.asarray(
+                rng.integers(0, 3, size=kinds.shape[0]).astype(np.int32))
+        pk_k, pv_k, st_k, bid_k = fused_apply(
+            directory, frozen, kinds, keys, values, pk_k, pv_k,
+            dmax=dmax, interpret=True)
+        pk_r, pv_r, st_r, bid_r = kref.fused_apply_ref(
+            directory, frozen, kinds, keys, values, pk_r, pv_r, dmax=dmax)
+        np.testing.assert_array_equal(np.asarray(bid_k), np.asarray(bid_r),
+                                      err_msg=f"round {r}: bucket ids")
+        np.testing.assert_array_equal(np.asarray(st_k), np.asarray(st_r),
+                                      err_msg=f"round {r}: status")
+        np.testing.assert_array_equal(np.asarray(pk_k)[:P],
+                                      np.asarray(pk_r)[:P],
+                                      err_msg=f"round {r}: pool keys")
+        np.testing.assert_array_equal(np.asarray(pv_k)[:P],
+                                      np.asarray(pv_r)[:P],
+                                      err_msg=f"round {r}: pool vals")
+    return st_r
+
+
+@pytest.mark.parametrize("dmax,P,B,n,fill", [
+    (6, 16, 4, 8, 0.5),
+    (6, 64, 8, 32, 0.6),
+    (8, 100, 8, 64, 0.5),    # non-power-of-two P
+    (6, 32, 16, 16, 0.95),   # near-full pools → ST_FULL coverage
+    (4, 8, 4, 8, 1.0),       # everything full
+])
+def test_fused_apply_matches_ref_sweep(dmax, P, B, n, fill):
+    rng = np.random.default_rng(dmax * 1000 + P + n)
+    case = random_fused_case(rng, dmax, P, B, n, fill=fill)
+    status = assert_fused_matches_ref(*case, dmax=dmax, rounds=3, rng=rng)
+    # the sweep must exercise real outcomes, not vacuously pass
+    assert np.asarray(status).size == n
+
+
+@pytest.mark.parametrize("ins_frac", [0.0, 0.5, 1.0])
+def test_fused_apply_insert_mixes(ins_frac):
+    """0/50/100% insert mixes with heavy intra-batch duplicate keys: the
+    kernel's duplicate-bucket linkage must reproduce the oracle's strict
+    lane-order linearization (rule B makes that the only order that
+    matters)."""
+    rng = np.random.default_rng(int(ins_frac * 7) + 11)
+    case = random_fused_case(rng, 6, 32, 4, 32, fill=0.5, ins_frac=ins_frac,
+                             key_lo=1, key_hi=12)   # ~3 lanes per key
+    assert_fused_matches_ref(*case, dmax=6, rounds=2)
+
+
+def test_fused_apply_status_space_covered():
+    """One adversarial geometry must surface every status code — frozen
+    hits, full-bucket blocks, hits, misses and idle lanes all in one
+    batch (guards the sweep against silently losing coverage)."""
+    rng = np.random.default_rng(5)
+    counts = {kref.ST_IDLE: 0, kref.ST_FALSE: 0, kref.ST_TRUE: 0,
+              kref.ST_FROZEN: 0, kref.ST_FULL: 0}
+    for trial in range(6):
+        # alternate sparse/packed pools: packed trials produce ST_FULL,
+        # sparse ones leave room for TRUE/FALSE insert+delete outcomes
+        case = random_fused_case(rng, 5, 16, 4, 64,
+                                 fill=0.45 if trial % 2 else 0.95,
+                                 frozen_frac=0.4, key_hi=32)
+        status = np.asarray(assert_fused_matches_ref(*case, dmax=5,
+                                                     rounds=2, rng=rng))
+        for code in counts:
+            counts[code] += int((status == code).sum())
+    missing = [code for code, c in counts.items() if c == 0]
+    assert not missing, f"status codes never produced: {missing} ({counts})"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_fused_apply_hypothesis(data):
+    dmax = data.draw(st.sampled_from([4, 6]))
+    P = data.draw(st.sampled_from([8, 16, 64]))
+    B = data.draw(st.sampled_from([2, 8]))
+    n = data.draw(st.sampled_from([8, 24]))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    case = random_fused_case(rng, dmax, P, B, n,
+                             fill=data.draw(st.floats(0.0, 1.0)),
+                             frozen_frac=data.draw(st.floats(0.0, 0.5)))
+    assert_fused_matches_ref(*case, dmax=dmax, rounds=2, rng=rng)
+
+
+# ---------------------------------------------------------------------------
 # end-to-end: kernel fast path == reference transaction
 
 
@@ -214,11 +353,13 @@ def table_fns(cfg):
     return {
         "apply_ref": jax.jit(partial(T.apply_batch, cfg)),
         "apply_kernel": partial(kops.apply_batch_kernel, cfg, interpret=True),
+        "apply_fused": partial(kops.apply_batch_fused, cfg, interpret=True),
         "lookup_kernel": partial(kops.kernel_lookup, cfg, interpret=True),
     }
 
 
-def test_kernel_fastpath_equals_reference_transaction():
+@pytest.mark.parametrize("kernel", ["apply_kernel", "apply_fused"])
+def test_kernel_fastpath_equals_reference_transaction(kernel):
     cfg = T.TableConfig(dmax=6, bucket_size=4, pool_size=64, n_lanes=8)
     fns = table_fns(cfg)
     rng = np.random.default_rng(7)
@@ -230,7 +371,7 @@ def test_kernel_fastpath_equals_reference_transaction():
         vals = rng.integers(0, 99, size=8).astype(np.int32)
         ops = T.make_ops(cfg, s_ref, kinds, keys, vals)
         s_ref, r_ref = fns["apply_ref"](s_ref, ops)
-        s_ker, r_ker = fns["apply_kernel"](s_ker, ops)
+        s_ker, r_ker = fns[kernel](s_ker, ops)
         np.testing.assert_array_equal(np.asarray(r_ker.status),
                                       np.asarray(r_ref.status),
                                       err_msg=f"step {step}")
@@ -248,10 +389,13 @@ def test_kernel_fastpath_equals_reference_transaction():
     np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
 
 
-def test_kernel_path_blocks_frozen_buckets():
-    """The kernel combiner is freeze-oblivious; the wrapper must complete
-    frozen-bucket ops with FROZEN and leave the bucket untouched (paper
-    §4.5), exactly like the reference transaction."""
+@pytest.mark.parametrize("kernel", ["apply_kernel", "apply_fused"])
+def test_kernel_path_blocks_frozen_buckets(kernel):
+    """The grouped kernel combiner is freeze-oblivious (its wrapper masks
+    frozen destinations); the fused kernel checks the frozen vector
+    in-kernel. Either way frozen-bucket ops must complete with FROZEN and
+    leave the bucket untouched (paper §4.5), exactly like the reference
+    transaction."""
     cfg = T.TableConfig(hash_name="identity", bucket_size=4, dmax=6,
                         pool_size=64, n_lanes=8)
     fns = table_fns(cfg)
@@ -276,9 +420,88 @@ def test_kernel_path_blocks_frozen_buckets():
     keys = np.zeros(8, np.int32)
     keys[0] = np.int32(np.uint32(0x02 << 24))
     ops = T.make_ops(cfg, s, kinds, keys, keys)
-    s_ker, r_ker = fns["apply_kernel"](jax.tree.map(jnp.copy, s), ops)
+    s_ker, r_ker = fns[kernel](jax.tree.map(jnp.copy, s), ops)
     s_ref, r_ref = fns["apply_ref"](s, ops)
     assert int(r_ker.status[0]) == int(r_ref.status[0]) == T.FROZEN
     assert to_dict(cfg, s_ker) == to_dict(cfg, s_ref)
     np.testing.assert_array_equal(np.asarray(s_ker.applied_seq),
                                   np.asarray(s_ref.applied_seq))
+
+
+def test_fused_overflow_batch_triggers_split_fallback():
+    """Insert batches that overflow tiny buckets: the fused kernel reports
+    ST_FULL, the wrapper's slow path splits/doubles, and the retried state
+    stays bit-identical with the reference transaction throughout."""
+    cfg = T.TableConfig(dmax=6, bucket_size=2, pool_size=32, n_lanes=8)
+    fns = table_fns(cfg)
+    rng = np.random.default_rng(13)
+    s_ref = T.init_table(cfg)
+    s_ker = T.init_table(cfg)
+    for step in range(6):
+        keys = rng.choice(np.arange(1, 500), size=8, replace=False)
+        keys = keys.astype(np.int32)
+        kinds = np.full(8, T.INS, np.int32)
+        ops = T.make_ops(cfg, s_ref, kinds, keys, keys)
+        s_ref, r_ref = fns["apply_ref"](s_ref, ops)
+        s_ker, r_ker = fns["apply_fused"](s_ker, ops)
+        np.testing.assert_array_equal(np.asarray(r_ker.status),
+                                      np.asarray(r_ref.status),
+                                      err_msg=f"step {step}")
+        assert to_dict(cfg, s_ker) == to_dict(cfg, s_ref), f"step {step}"
+    # 48 distinct keys into 2-wide buckets: splits definitely happened
+    assert int(s_ker.depth) >= 1
+    np.testing.assert_array_equal(np.asarray(s_ker.depth),
+                                  np.asarray(s_ref.depth))
+
+
+# ---------------------------------------------------------------------------
+# facade: fused/interpret vs XLA single-pass vs wave fallback
+
+
+@pytest.mark.parametrize("ins_frac", [0.0, 0.5, 1.0])
+def test_facade_backend_parity_insert_mixes(ins_frac):
+    """The same op stream through three resolved plans — XLA single-pass,
+    the fused Pallas kernel (interpret), and the wave-loop fallback
+    (use_fast_path=False) — must produce identical statuses and identical
+    logical content at every step."""
+    from repro.core.spec import TableSpec
+    from repro.table_api import Table
+
+    base = dict(dmax=6, bucket_size=4, pool_size=64, n_lanes=8)
+    specs = {
+        "xla": TableSpec(**base, backend="xla"),
+        "fused": TableSpec(**base, backend="interpret"),
+        "wave": TableSpec(**base, backend="xla", use_fast_path=False),
+    }
+    assert specs["fused"].plan().fused_apply   # interpret default = fused
+    assert specs["xla"].plan().backend == "xla"
+    tables = {k: Table.create(s) for k, s in specs.items()}
+    seed_keys = np.arange(1, 20, dtype=np.int32)   # deletes have targets
+    for name in tables:
+        tables[name], _ = tables[name].insert(seed_keys, seed_keys)
+    rng = np.random.default_rng(int(ins_frac * 10) + 3)
+    for step in range(5):
+        m = 12   # not a lane multiple → exercises the NOP-padding path
+        kinds = np.where(rng.random(m) < ins_frac, T.INS, T.DEL)
+        kinds = kinds.astype(np.int32)
+        keys = rng.integers(1, 40, size=m).astype(np.int32)  # heavy dups
+        vals = rng.integers(0, 99, size=m).astype(np.int32)
+        res = {}
+        for name in tables:
+            tables[name], res[name] = tables[name].apply(kinds, keys, vals)
+        st_x = np.asarray(res["xla"].status)
+        np.testing.assert_array_equal(np.asarray(res["fused"].status), st_x,
+                                      err_msg=f"step {step}: fused vs xla")
+        np.testing.assert_array_equal(np.asarray(res["wave"].status), st_x,
+                                      err_msg=f"step {step}: wave vs xla")
+        d_x = to_dict(tables["xla"].config, tables["xla"].state)
+        assert to_dict(tables["fused"].config,
+                       tables["fused"].state) == d_x, f"step {step}"
+        assert to_dict(tables["wave"].config,
+                       tables["wave"].state) == d_x, f"step {step}"
+    # the mixes must really have exercised the kernel: lookups agree too
+    q = np.arange(1, 40, dtype=np.int32)
+    f_x, v_x = tables["xla"].lookup(q)
+    f_f, v_f = tables["fused"].lookup(q)
+    np.testing.assert_array_equal(np.asarray(f_f), np.asarray(f_x))
+    np.testing.assert_array_equal(np.asarray(v_f), np.asarray(v_x))
