@@ -1,0 +1,237 @@
+"""Chaos-harness benchmark: oracle throughput and fault-injection overhead.
+
+Two sections, one committed artifact (``BENCH_chaos.json``):
+
+**Oracle rows** (``oracle/<ops>/<mix>``) race the two differential
+oracles head to head at 10k / 100k / 1M ops on three mixes — ``load``
+(insert-only, fresh keys), ``churn`` (3:1:1 insert:delete:read, the mix
+the chaos traces use), and ``read_heavy`` (warm fill then ~5:1
+read:write). Each oracle is driven exactly the way the harness consumes
+it: the materializing :class:`SeqExtHash` per op (its directory walk is
+the paper-literal semantics and cannot be batched), the
+:class:`StreamingOracle` through its chunked ``run_ops`` /
+``lookup_batch`` fast path. The directory depth per size matches what
+``chaos_setup`` provisions for a trace of that length, and every row
+finishes with a digest cross-check between the two oracles — the bench
+is itself a (large) differential test.
+
+**Harness rows** (``harness/<ops>``) measure what fault injection costs:
+the same trace replayed through the real ``Table`` twice, once with a
+chaos schedule (kill/revive, re-shard, policy flap, handover, torn save
+— backend swaps are excluded so an interpret-backend swap cannot turn
+the row into an interpreter benchmark) and once clean (empty schedule),
+identical streaming-oracle checking in both. The overhead ratio is the
+amortized price of fault injection over the trace — note it can dip
+below 1.0: a ``policy_flap`` that detaches or starves the resize policy
+removes maintenance work from the rest of the trace, which can outweigh
+the snapshot/restore cost of the other events; both wall times are
+recorded so the row stays interpretable either way. 10k and 100k run by
+default; pass ``--full`` for the 1M-op row (slow: the table replay
+itself dominates).
+
+Usage:
+  python -m benchmarks.chaos                      # committed artifact
+  python -m benchmarks.chaos --sizes 10000 --mixes churn
+  python -m benchmarks.chaos --full               # adds harness/1000000
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+MIXES = ("load", "churn", "read_heavy")
+
+
+def _oracle_dmax(ops: int) -> int:
+    """Directory depth chaos_setup provisions for a trace of ``ops``."""
+    peak = max(4096, ops // 2)
+    return (8 * peak - 1).bit_length()
+
+
+def _gen_mix(mix: str, ops: int, dmax: int, seed: int):
+    """(kinds, keys, vals) in run_ops encoding: 0=read 1=insert 2=delete."""
+    import numpy as np
+
+    rng = np.random.default_rng([seed, MIXES.index(mix)])
+    uni = 1 << dmax
+    if mix == "load":
+        kinds = np.ones(ops, dtype=np.int64)
+        keys = rng.permutation(uni)[:ops].astype(np.int64)
+    elif mix == "churn":
+        kinds = rng.choice([1, 1, 1, 2, 0], size=ops).astype(np.int64)
+        keys = rng.integers(0, uni, size=ops).astype(np.int64)
+    elif mix == "read_heavy":
+        warm = max(1, ops // 6)
+        kinds = np.concatenate(
+            [np.ones(warm, dtype=np.int64), np.zeros(ops - warm, dtype=np.int64)]
+        )
+        keys = np.concatenate(
+            [
+                rng.permutation(uni)[:warm].astype(np.int64),
+                rng.integers(0, uni, size=ops - warm).astype(np.int64),
+            ]
+        )
+    else:
+        raise ValueError(f"unknown mix {mix!r}")
+    vals = rng.integers(0, 1 << 20, size=ops).astype(np.int64)
+    return kinds, keys, vals
+
+
+def bench_oracle(ops: int, mix: str, chunk: int, seed: int) -> dict:
+    import numpy as np
+
+    from repro.core.reference import SeqExtHash, StreamingOracle
+
+    dmax = _oracle_dmax(ops)
+    b = 8
+    kinds, keys, vals = _gen_mix(mix, ops, dmax, seed)
+
+    stream = StreamingOracle(dmax, b)
+    t0 = time.perf_counter()
+    for i in range(0, ops, chunk):
+        ck = kinds[i : i + chunk]
+        if mix == "read_heavy" and not ck.any():
+            stream.lookup_batch(keys[i : i + chunk])
+        else:
+            stream.run_ops(ck, keys[i : i + chunk], vals[i : i + chunk])
+    stream_digest = stream.digest
+    t_stream = time.perf_counter() - t0
+
+    mat = SeqExtHash(dmax, b)
+    t0 = time.perf_counter()
+    for kd, k, v in zip(kinds.tolist(), keys.tolist(), vals.tolist()):
+        if kd == 1:
+            mat.insert(k, v)
+        elif kd == 2:
+            mat.delete(k)
+        else:
+            mat.lookup(k)
+    t_mat = time.perf_counter() - t0
+
+    # differential cross-check: both oracles must agree on final content
+    from repro.core.reference import content_digest
+
+    d = mat.as_dict()
+    mk = np.fromiter(d.keys(), dtype=np.int64, count=len(d))
+    mv = np.fromiter(d.values(), dtype=np.int64, count=len(d))
+    if content_digest(mk, mv) != stream_digest or len(d) != stream.size:
+        raise SystemExit(f"oracle divergence in bench row {ops}/{mix}")
+
+    return {
+        "ops": ops,
+        "mix": mix,
+        "dmax": dmax,
+        "chunk": chunk,
+        "streaming_kops": round(ops / t_stream / 1e3, 1),
+        "materializing_kops": round(ops / t_mat / 1e3, 1),
+        "speedup": round(t_mat / t_stream, 2),
+        "live_items": stream.size,
+    }
+
+
+# harness rows fire these five kinds; backend_swap is excluded because a
+# swap onto the interpret backend would turn the row into a measurement
+# of the Pallas interpreter rather than of fault-injection overhead
+# (backend swaps stay covered by the chaos tests and oracle rows)
+HARNESS_KINDS = ("kill_revive", "reshard", "policy_flap", "handover", "torn_save")
+
+
+def bench_harness(ops: int, seed: int) -> dict:
+    from repro.workloads.chaos import chaos_replay, chaos_setup
+
+    # exactly one event of each kind: the row reads as "price of one
+    # kill/revive + one re-shard + one flap + one handover + one torn
+    # save over an N-op trace" rather than scaling with the default
+    # schedule density
+    spec, trace, schedule = chaos_setup(
+        "chaos_churn",
+        seed=seed,
+        ops=ops,
+        kinds=HARNESS_KINDS,
+        n_events=len(HARNESS_KINDS),
+    )
+
+    # clean runs FIRST so it absorbs the base-spec jit compiles; the chaos
+    # run then pays only event-induced work (including respec compiles,
+    # which genuinely are fault-injection overhead)
+    t0 = time.perf_counter()
+    clean = chaos_replay(spec, trace, (), oracle="streaming")
+    t_clean = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    chaos = chaos_replay(spec, trace, schedule, oracle="streaming")
+    t_chaos = time.perf_counter() - t0
+
+    total = chaos["mutations"] + chaos["reads"]
+    return {
+        "ops": total,
+        "events_fired": chaos["events_fired"],
+        "event_kinds": sorted(chaos["event_counts"]),
+        "chaos_seconds": round(t_chaos, 2),
+        "clean_seconds": round(t_clean, 2),
+        "chaos_ops_s": round(total / t_chaos, 1),
+        "clean_ops_s": round(total / t_clean, 1),
+        "overhead_x": round(t_chaos / t_clean, 3),
+        "chaos_ok": chaos["ok"],
+        "clean_ok": clean["ok"],
+        "ok": chaos["ok"] and clean["ok"],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", type=int, nargs="*", default=[10_000, 100_000, 1_000_000])
+    ap.add_argument("--mixes", nargs="*", default=list(MIXES))
+    ap.add_argument("--harness-sizes", type=int, nargs="*", default=[10_000, 100_000])
+    ap.add_argument("--chunk", type=int, default=8192)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true", help="add the 1M harness row")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args()
+
+    import jax
+
+    jax.config.update("jax_platform_name", "cpu")
+
+    rows: dict = {}
+    for ops in args.sizes:
+        for mix in args.mixes:
+            rec = bench_oracle(ops, mix, args.chunk, args.seed)
+            rows[f"oracle/{ops}/{mix}"] = rec
+            print(
+                f"oracle/{ops}/{mix}: streaming {rec['streaming_kops']}k "
+                f"vs materializing {rec['materializing_kops']}k "
+                f"-> {rec['speedup']}x (dmax={rec['dmax']})",
+                flush=True,
+            )
+
+    harness_sizes = list(args.harness_sizes)
+    if args.full and 1_000_000 not in harness_sizes:
+        harness_sizes.append(1_000_000)
+    for ops in harness_sizes:
+        rec = bench_harness(ops, args.seed)
+        rows[f"harness/{ops}"] = rec
+        print(
+            f"harness/{ops}: chaos {rec['chaos_ops_s']} ops/s vs clean "
+            f"{rec['clean_ops_s']} ops/s -> {rec['overhead_x']}x overhead "
+            f"({rec['events_fired']} events, ok={rec['ok']})",
+            flush=True,
+        )
+
+    with open(args.out, "w") as f:
+        json.dump({"chunk": args.chunk, "rows": rows}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[chaos] wrote {len(rows)} rows to {args.out}")
+
+    bad = [name for name, rec in rows.items() if rec.get("ok") is False]
+    if bad:
+        print(f"[chaos] PARITY FAILURES: {bad}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

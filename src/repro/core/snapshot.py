@@ -169,6 +169,31 @@ def extract_image(table) -> TableImage:
 # on-disk format (versioned npz)
 
 
+class InjectedFault(RuntimeError):
+    """Raised by a save-path fault hook to simulate a crash mid-save."""
+
+
+# test-only fault injection around the save path's atomicity point: the
+# chaos harness (repro.workloads.chaos) installs a hook that raises
+# InjectedFault at "pre_rename" to model a torn save — the tmp file is
+# left behind (as a real crash would) and the destination must still hold
+# its previous intact image. None in production.
+_FAULT_HOOK = None
+
+
+def set_fault_hook(hook):
+    """Install (or clear, with ``None``) the save-path fault hook.
+
+    ``hook(point, path)`` is called at ``"pre_rename"`` (tmp file written,
+    destination untouched) and ``"post_rename"`` (destination replaced).
+    Raising from ``"pre_rename"`` simulates a crash before the atomic
+    rename. Returns the previously installed hook (restore it in a
+    ``finally``)."""
+    global _FAULT_HOOK
+    prev, _FAULT_HOOK = _FAULT_HOOK, hook
+    return prev
+
+
 def save_image(image: TableImage, path: str) -> str:
     """Write ``image`` to ``path`` as a single npz file (atomic rename)."""
     arrays = {"keys": image.keys}
@@ -184,7 +209,11 @@ def save_image(image: TableImage, path: str) -> str:
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(buf.getvalue())
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK("pre_rename", path)
     os.replace(tmp, path)  # atomicity point (mirrors training/checkpoint.py)
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK("post_rename", path)
     return path
 
 

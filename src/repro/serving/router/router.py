@@ -82,7 +82,7 @@ class Router:
 
     def __init__(self, table, config: RouterConfig = RouterConfig(),
                  cost_model: Optional[CostModel] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, on_event=None):
         spec = table.spec
         assert spec.value_schema is None, (
             "the serving router routes the raw i32 value mode; pytree "
@@ -95,6 +95,16 @@ class Router:
         self.metrics = RouterMetrics()
         self.pressure = 0.0
         self._next_rid = 0
+        # observability hook: on_event(name, info_dict) fires on the
+        # control-plane transitions external harnesses care about
+        # (handover begin/end, maintenance rounds); None = no-op. The
+        # chaos harness records these to assert its injected handovers
+        # really exercised the router path.
+        self.on_event = on_event
+
+    def _emit(self, name: str, **info) -> None:
+        if self.on_event is not None:
+            self.on_event(name, info)
 
     # -- derived control values -------------------------------------------
 
@@ -276,6 +286,7 @@ class Router:
         jax.block_until_ready(res.status)
         self.metrics.maintenance_rounds += 1
         self._resample_pressure()
+        self._emit("maintenance", pressure=round(self.pressure, 4))
 
     # -- rolling upgrade ---------------------------------------------------
 
@@ -297,6 +308,8 @@ class Router:
 
         depth_before = len(self.queues)
         image = snapshot.extract_image(self.table)
+        self._emit("handover_begin", n_items=image.n_items,
+                   queued=depth_before)
         successor = snapshot.restore_from_image(image, new_spec, mesh)
         self.table = successor
         if warmup:
@@ -309,6 +322,8 @@ class Router:
         self.metrics.handovers += 1
         # pressure is a property of the predecessor's layout; resample lazily
         self.pressure = 0.0
+        self._emit("handover_end", n_items=image.n_items,
+                   queued=len(self.queues))
 
     # -- reporting ---------------------------------------------------------
 

@@ -18,16 +18,24 @@ differentially-checked scenario axis:
   linearization order, optional mid-trace rolling-upgrade handover;
 * :mod:`repro.workloads.scenarios` — the named scenario registry the tests
   and ``benchmarks/churn.py`` sweep (uniform / zipf / phased_drain /
-  mixed_churn / snapshot_restore, each for local and sharded placement;
-  ``snapshot_restore`` kills and revives the table mid-trace through a
-  durable image — see :mod:`repro.core.snapshot`).
+  mixed_churn / snapshot_restore / chaos_churn / chaos_reshard, each for
+  local and sharded placement; ``snapshot_restore`` kills and revives the
+  table mid-trace through a durable image — see
+  :mod:`repro.core.snapshot`);
+* :mod:`repro.workloads.chaos` — the chaos replay harness: a
+  seed-deterministic fault-injection schedule (kill/revive, N→M re-shard,
+  policy flaps, router handovers, torn saves, backend swaps) overlaid on
+  any registry scenario, checked per-op and per-event against the
+  streaming oracle, with a failing-seed reproducer CLI
+  (``python -m repro.workloads.chaos --seed N``) that shrinks failing
+  schedules.
 
 Everything is seed-deterministic: the same scenario name and seed produce
 bit-identical op streams on every host.
 """
 
 from repro.workloads.generators import OpMix, YCSB_MIXES
-from repro.workloads.replay import ReplayMismatch, replay
+from repro.workloads.replay import ReplayMismatch, oracle_for, replay
 from repro.workloads.scenarios import SCENARIOS, get_scenario
 from repro.workloads.serving_driver import serve_closed_loop
 from repro.workloads.trace import Phase, Trace
@@ -38,8 +46,38 @@ __all__ = [
     "Phase",
     "Trace",
     "replay",
+    "oracle_for",
     "ReplayMismatch",
     "SCENARIOS",
     "get_scenario",
     "serve_closed_loop",
+    "EVENT_KINDS",
+    "ChaosConfig",
+    "ChaosEvent",
+    "gen_schedule",
+    "chaos_setup",
+    "chaos_replay",
+    "shrink_schedule",
 ]
+
+# chaos is exported lazily (PEP 562): eager import would shadow
+# ``python -m repro.workloads.chaos`` with a runpy double-import warning
+_CHAOS_NAMES = frozenset(
+    {
+        "EVENT_KINDS",
+        "ChaosConfig",
+        "ChaosEvent",
+        "gen_schedule",
+        "chaos_setup",
+        "chaos_replay",
+        "shrink_schedule",
+    }
+)
+
+
+def __getattr__(name):
+    if name in _CHAOS_NAMES:
+        from repro.workloads import chaos
+
+        return getattr(chaos, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -21,11 +21,24 @@ check is therefore parity evidence for the snapshot subsystem itself, and
 the depth trajectory after the revive proves the restored table still
 auto-splits and auto-merges.
 
-A final sweep looks up every key the trace ever touched and checks exact
-content parity. Mismatches raise :class:`ReplayMismatch` (or are collected
-when ``raise_on_mismatch=False``); the returned report carries depth
-trajectory, policy action counts, phase throughput, and check totals, and
-is what ``benchmarks/churn.py`` serializes and CI uploads as an artifact.
+A final sweep checks exact content parity. Mismatches raise
+:class:`ReplayMismatch` (or are collected when ``raise_on_mismatch=False``);
+the returned report carries depth trajectory, policy action counts, phase
+throughput, and check totals, and is what ``benchmarks/churn.py``
+serializes and CI uploads as an artifact.
+
+Two interchangeable oracles back the differential check (``oracle=``):
+
+* ``"streaming"`` (default) — :class:`repro.core.reference.StreamingOracle`:
+  O(1) per op, O(live) memory; final-content parity is a rolling multiset
+  digest compared against the digest of the table's canonical snapshot
+  image, so million-op traces stay cheap to verify end to end;
+* ``"materializing"`` — the original :class:`SeqExtHash` transcription
+  (real directory, real splits), kept as the structural cross-check; the
+  final sweep re-looks-up every key the trace ever touched;
+* ``"both"`` — run both oracles over the same table run and additionally
+  assert they agree with *each other* on every status and read (any
+  divergence raises immediately: that is an oracle bug, not a table bug).
 
 The oracle has no resize policy — which is the point: the policy must be
 content-transparent, so a policy-driven table and the policy-free oracle
@@ -41,9 +54,11 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.reference import SeqExtHash
+from repro.core.reference import SeqExtHash, StreamingOracle, content_digest
 from repro.workloads.generators import DEL, INS, NOP
 from repro.workloads.trace import Trace, gen_steps
+
+ORACLES = ("streaming", "materializing", "both")
 
 
 class ReplayMismatch(AssertionError):
@@ -61,6 +76,22 @@ def _ref_for(spec) -> SeqExtHash:
     )
 
 
+def oracle_for(spec, kind: str = "streaming"):
+    """Build the sequential oracle matching ``spec``'s aggregate addressing
+    (``dmax + shard_bits`` top hash bits). ``kind`` is ``"streaming"`` or
+    ``"materializing"`` — statuses and content are identical; see the
+    module docstring for the trade-off."""
+    if kind == "materializing":
+        return _ref_for(spec)
+    assert kind == "streaming", kind
+    extra = spec.shard_bits if spec.placement == "sharded" else 0
+    return StreamingOracle(
+        dmax=spec.dmax + extra,
+        bucket_size=spec.bucket_size,
+        hash_name=spec.hash_name,
+    )
+
+
 def replay(
     spec,
     trace: Trace,
@@ -71,21 +102,34 @@ def replay(
     raise_on_mismatch: bool = True,
     max_examples: int = 8,
     restore_spec=None,
+    oracle: str = "streaming",
 ) -> dict:
     """Run ``trace`` through a fresh table built from ``spec``.
 
     ``check=False`` skips the oracle entirely (benchmark mode: no per-step
     host sync beyond the ``depth_every`` sampling). ``restore_spec``
     (default: ``spec``) is the target spec for ``snapshot_restore`` phase
-    revives — pass a different one to re-shard mid-trace. Returns the
+    revives — pass a different one to re-shard mid-trace. ``oracle``
+    selects the reference implementation (see module docstring):
+    ``"streaming"`` | ``"materializing"`` | ``"both"``. Returns the
     report dict described in the module docstring."""
     import tempfile
 
     from repro.table_api import Table
 
     assert spec.value_schema is None, "replay drives the raw i32 value mode"
+    assert oracle in ORACLES, oracle
     table = Table.create(spec, mesh)
-    ref: Optional[SeqExtHash] = _ref_for(spec) if check else None
+    refs: list = []
+    if check:
+        if oracle in ("materializing", "both"):
+            refs.append(oracle_for(spec, "materializing"))
+        if oracle in ("streaming", "both"):
+            refs.append(oracle_for(spec, "streaming"))
+    ref = refs[0] if refs else None  # primary (drives `want`)
+    mat_ref = next((r for r in refs if isinstance(r, SeqExtHash)), None)
+    stream_ref = next(
+        (r for r in refs if isinstance(r, StreamingOracle)), None)
     snapshot_restores = 0
     # revives rebuild the table with a clean error flag; accumulate the
     # pre-revive flags so capacity saturation can never be laundered away
@@ -152,10 +196,19 @@ def replay(
         m = int(step.kinds.shape[0])
         if m:
             table, res = table.apply(step.kinds, step.keys, step.vals)
+            if spec.placement == "sharded":
+                # serialize dispatch: on forced-host-device CPU meshes the
+                # thunk runtime can report res.status ready while the state
+                # outputs' collectives are still in flight; overlapping the
+                # next execution then deadlocks XLA's thread-pool rendezvous
+                import jax
+
+                jax.block_until_ready(table.state)
             mutations += step.n_mutations
             phase_ops += m
-            touched.update(int(k) for k in step.keys[step.kinds != NOP])
-            if ref is not None:
+            if mat_ref is not None:
+                touched.update(int(k) for k in step.keys[step.kinds != NOP])
+            if refs:
                 got = np.asarray(res.status)
                 for lane in range(m):
                     kind = int(step.kinds[lane])
@@ -163,10 +216,20 @@ def replay(
                         continue
                     key = int(step.keys[lane])
                     if kind == INS:
-                        want = ref.insert(key, int(step.vals[lane]))
+                        val = int(step.vals[lane])
+                        wants = [r.insert(key, val) for r in refs]
                     else:
                         assert kind == DEL
-                        want = ref.delete(key)
+                        wants = [r.delete(key) for r in refs]
+                    if len(wants) == 2 and wants[0] != wants[1]:
+                        # the two oracles disagreeing is an oracle bug —
+                        # always raise, never collect
+                        raise ReplayMismatch(
+                            f"oracle divergence at step {steps} lane "
+                            f"{lane}: materializing={wants[0]} "
+                            f"streaming={wants[1]} (op "
+                            f"{'ins' if kind == INS else 'del'} key {key})")
+                    want = wants[0]
                     if int(got[lane]) != want:
                         note(
                             "status",
@@ -183,14 +246,24 @@ def replay(
         r = int(step.reads.shape[0])
         if r:
             found, vals = table.lookup(step.reads)
+            if spec.placement == "sharded":
+                import jax
+
+                jax.block_until_ready((found, vals))
             reads += r
             phase_ops += r
-            if ref is not None:
+            if refs:
                 found = np.asarray(found)
                 vals = np.asarray(vals)
                 for i in range(r):
                     key = int(step.reads[i])
-                    w_found, w_val = ref.lookup(key)
+                    wants = [ref.lookup(key) for ref in refs]
+                    if len(wants) == 2 and wants[0] != wants[1]:
+                        raise ReplayMismatch(
+                            f"oracle divergence at step {steps} read "
+                            f"{i}: materializing={wants[0]} "
+                            f"streaming={wants[1]} (key {key})")
+                    w_found, w_val = wants[0]
                     got_f, got_v = bool(found[i]), int(vals[i])
                     if got_f != w_found or (w_found and got_v != w_val):
                         note(
@@ -212,9 +285,34 @@ def replay(
             depth_traj.append(d)
     flush_phase(None)
 
-    # final sweep: every key the trace ever mutated, plus the absent band
-    if ref is not None:
-        ref_map = ref.as_dict()
+    # final content parity, streaming flavor: the canonical snapshot image
+    # of the table must digest to exactly the oracle's rolling multiset
+    # digest (whole-content evidence in O(n) host work, no touched-set)
+    if stream_ref is not None:
+        from repro.core import snapshot as _snapshot
+
+        image = _snapshot.extract_image(table)
+        got_digest = content_digest(image.keys, image.values)
+        if got_digest != stream_ref.digest:
+            note(
+                "content",
+                {
+                    "final_digest": got_digest,
+                    "want": stream_ref.digest,
+                    "n_items": image.n_items,
+                    "want_items": stream_ref.size,
+                },
+            )
+        elif image.n_items != stream_ref.size:
+            note(
+                "content",
+                {"final_size": image.n_items, "want": stream_ref.size},
+            )
+
+    # final sweep, materializing flavor: re-look-up every key the trace
+    # ever mutated, plus the absent band
+    if mat_ref is not None:
+        ref_map = mat_ref.as_dict()
         probe = np.asarray(sorted(touched), np.int32)
         for lo in range(0, len(probe), lookup_chunk):
             q = probe[lo : lo + lookup_chunk]
@@ -254,6 +352,7 @@ def replay(
         "mutations": mutations,
         "reads": reads,
         "checked": ref is not None,
+        "oracle": oracle if ref is not None else None,
         "status_mismatches": status_mismatches,
         "content_mismatches": content_mismatches,
         "mismatch_examples": examples,

@@ -18,7 +18,15 @@ for either placement. The four classes map to the acceptance matrix:
   trigger the revive in the replayer): once at peak occupancy with growth
   traffic after it, once followed by a drain — the revived table must
   keep auto-splitting AND auto-merging, and every post-revive check is
-  differential parity evidence for the snapshot subsystem.
+  differential parity evidence for the snapshot subsystem;
+* ``chaos_churn`` / ``chaos_reshard`` — the fault-injection substrate for
+  :mod:`repro.workloads.chaos`: long multi-direction churn traces whose
+  phase plateaus give injected events (kill/revive, N→M re-shard, policy
+  flaps, router handover, torn saves, backend swaps) a full spread of
+  occupancy regimes to land in. Replayed plain they are ordinary parity
+  scenarios; the chaos engine overlays a seed-deterministic event
+  schedule (``chaos_reshard`` leans on drain→refill plateaus so
+  re-shards hit both a shrinking and a growing directory).
 
 Scenarios are deterministic in (name, placement, seed); ``scale`` stretches
 step counts for benchmark runs without touching the op stream's shape.
@@ -132,12 +140,36 @@ def _snapshot_restore_trace() -> Tuple[Phase, ...]:
     )
 
 
+def _chaos_churn_trace() -> Tuple[Phase, ...]:
+    return (
+        Phase("fill", 18, "fill", batch=_BATCH),
+        Phase("churn_up", 12, "churn", dist="zipf", batch=_BATCH),
+        Phase("drain", 20, "drain", batch=_BATCH),
+        Phase("cool", 10, "maintain", batch=_BATCH),
+        Phase("refill", 10, "fill", batch=_BATCH),
+        Phase("churn_down", 10, "churn", dist="uniform", batch=_BATCH),
+    )
+
+
+def _chaos_reshard_trace() -> Tuple[Phase, ...]:
+    return (
+        Phase("fill", 22, "fill", batch=_BATCH),
+        Phase("stable", 12, "A", dist="uniform", batch=_BATCH),
+        Phase("churn", 12, "churn", dist="zipf", batch=_BATCH),
+        Phase("drain", 24, "drain", batch=_BATCH),
+        Phase("maintain", 10, "maintain", batch=_BATCH),
+        Phase("refill", 12, "fill", batch=_BATCH),
+    )
+
+
 _TRACES = {
     "uniform": _uniform_trace,
     "zipf": _zipf_trace,
     "phased_drain": _phased_drain_trace,
     "mixed_churn": _mixed_churn_trace,
     "snapshot_restore": _snapshot_restore_trace,
+    "chaos_churn": _chaos_churn_trace,
+    "chaos_reshard": _chaos_reshard_trace,
 }
 
 SCENARIOS = tuple(sorted(_TRACES))

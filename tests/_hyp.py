@@ -13,6 +13,11 @@ from __future__ import annotations
 try:  # pragma: no cover - exercised only when hypothesis is installed
     from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
+    # CI parity with the fallback: derandomized (failures reproduce from
+    # the test id alone, no database), no deadline (jax compile times)
+    settings.register_profile(
+        "repro", derandomize=True, deadline=None, print_blob=True)
+    settings.load_profile("repro")
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
     import functools

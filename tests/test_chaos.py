@@ -1,0 +1,235 @@
+"""Chaos harness acceptance: fault injection under differential parity.
+
+Fast tier (default): schedule determinism + kind coverage, shrinker
+minimality on synthetic predicates, a local chaos run firing every event
+kind under the dual oracle, a sharded subprocess run with genuine
+cross-placement re-shards, and the failing-seed CLI path (exit code,
+artifact, shrink-to-empty for a non-event-induced fault).
+
+Slow tier (`-m slow`, nightly CI): >=100k-op chaos runs on BOTH
+placements with >=3 distinct event types holding full differential
+parity — the ISSUE's headline acceptance criterion.
+
+The sharded runs execute in a subprocess with 8 forced host devices
+(device count is process-global); `default_mesh_for` builds true N->M
+meshes there, so re-shard candidates include local<->sharded flips and
+2/4/8-shard geometries.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.abspath(__file__)
+SRC = os.path.abspath(os.path.join(os.path.dirname(HERE), "..", "src"))
+
+
+def test_gen_schedule_deterministic_and_covering():
+    from repro.workloads.chaos import ChaosConfig, EVENT_KINDS, gen_schedule
+
+    cfg = ChaosConfig(n_events=9, seed=11)
+    a = gen_schedule(500, cfg)
+    assert a == gen_schedule(500, cfg)  # bit-identical replay
+    assert a != gen_schedule(500, ChaosConfig(n_events=9, seed=12))
+    assert len(a) == 9
+    assert all(1 <= e.step < 500 for e in a)
+    assert [e.step for e in a] == sorted(e.step for e in a)
+    # n_events >= len(kinds) -> every kind fires, by construction
+    assert {e.kind for e in a} == set(EVENT_KINDS)
+    sub = gen_schedule(100, ChaosConfig(
+        n_events=2, kinds=("kill_revive", "torn_save"), seed=0))
+    assert {e.kind for e in sub} == {"kill_revive", "torn_save"}
+    assert gen_schedule(100, ChaosConfig(n_events=0)) == ()
+
+
+def test_shrink_schedule_minimal():
+    from repro.workloads.chaos import ChaosEvent, shrink_schedule
+
+    evs = tuple(ChaosEvent(i, "kill_revive", i) for i in range(10))
+    bad = evs[6]
+    assert shrink_schedule(lambda s: bad in s, evs) == (bad,)
+    pair = {evs[2], evs[8]}
+    assert set(shrink_schedule(lambda s: pair <= set(s), evs)) == pair
+    # fault needs no events at all -> empty schedule (not event-induced)
+    assert shrink_schedule(lambda s: True, evs) == ()
+    with pytest.raises(ValueError):
+        shrink_schedule(lambda s: False, evs)
+
+
+def test_chaos_local_all_event_kinds():
+    """One local chaos run firing every event kind, dual-oracle checked:
+    per-op parity, per-event per-shard invariants, and digest-exact
+    content parity after each injection."""
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    from repro.workloads.chaos import EVENT_KINDS, chaos_replay, chaos_setup
+
+    spec, trace, schedule = chaos_setup("chaos_churn", seed=3, scale=0.4)
+    assert {e.kind for e in schedule} == set(EVENT_KINDS)
+    rep = chaos_replay(spec, trace, schedule, oracle="both")
+    assert rep["ok"], rep["mismatch_examples"]
+    assert rep["checked"] and rep["oracle"] == "both"
+    assert rep["events_skipped"] == 0
+    assert set(rep["event_counts"]) == set(EVENT_KINDS)
+    assert all(r["digest_ok"] for r in rep["events"])
+    assert all(r["invariant_shards"] >= 1 for r in rep["events"])
+    # chaos_churn still proves elasticity under fault injection
+    assert rep["policy"]["splits"] > 0
+    assert rep["depth"]["max"] > rep["depth"]["start"]
+
+
+def test_chaos_digest_check_catches_corruption():
+    """The harness must actually be able to fail: corrupting the oracle
+    digest mid-run trips the content check (self-test knob, the same
+    path the CLI's --self-test-fail uses)."""
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    from repro.workloads.chaos import chaos_setup, chaos_replay
+
+    spec, trace, schedule = chaos_setup(
+        "chaos_churn", seed=0, scale=0.2, kinds=("kill_revive",),
+        n_events=1)
+    rep = chaos_replay(spec, trace, schedule, raise_on_mismatch=False,
+                       _inject_digest_step=2)
+    assert not rep["ok"]
+    assert rep["content_mismatches"] > 0
+    assert rep["mismatch_examples"]
+
+
+# --- CLI: failing-seed reproducer ------------------------------------------
+
+
+@pytest.mark.subprocess
+def test_chaos_cli_failing_seed_artifact(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    art = tmp_path / "fail.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.workloads.chaos",
+         "--scenario", "chaos_churn", "--placement", "local",
+         "--seed", "0", "--scale", "0.25", "--events", "2",
+         "--self-test-fail", "5", "--artifact", str(art)],
+        env=env, capture_output=True, text=True, timeout=1800,
+        cwd=str(tmp_path))
+    assert proc.returncode == 1, (proc.stdout[-3000:], proc.stderr[-3000:])
+    assert art.exists()
+    a = json.loads(art.read_text())
+    # the injected digest fault is not event-induced: shrinks to empty
+    assert a["shrunk_schedule"] == []
+    assert a["report"]["ok"] is False
+    assert a["repro"].startswith("python -m repro.workloads.chaos ")
+    assert "--seed 0" in a["repro"]
+    assert "wrote failing-seed artifact" in proc.stdout
+
+
+@pytest.mark.subprocess
+def test_chaos_cli_clean_run(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.workloads.chaos",
+         "--scenario", "chaos_churn", "--placement", "local",
+         "--seed", "3", "--scale", "0.3", "--events", "3",
+         "--kinds", "kill_revive,policy_flap,torn_save"],
+        env=env, capture_output=True, text=True, timeout=1800,
+        cwd=str(tmp_path))
+    assert proc.returncode == 0, (proc.stdout[-3000:], proc.stderr[-3000:])
+    assert "ok=True" in proc.stdout
+    assert not os.path.exists(str(tmp_path / "chaos_failure.json"))
+
+
+# --- sharded: subprocess with 8 host devices -------------------------------
+
+
+def _run_self(flag: str, timeout: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run(
+        [sys.executable, HERE, flag],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, (proc.stdout[-3000:], proc.stderr[-3000:])
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+@pytest.mark.subprocess
+def test_chaos_sharded_cross_placement():
+    rep = _run_self("--run-sharded", 2400)
+    assert rep["ok"], rep["mismatch_examples"]
+    assert rep["events_skipped"] == 0
+    assert all(r["digest_ok"] for r in rep["events"])
+    moves = [r["to"] for r in rep["events"]
+             if r["kind"] in ("reshard", "handover")]
+    # the schedule (seed 5) includes a genuine cross-placement move
+    assert moves and any(t["placement"] == "local" for t in moves), moves
+    # per-event invariants ran against every shard of the then-current
+    # placement (2 shards when sharded, 1 when local)
+    assert {r["invariant_shards"] for r in rep["events"]} >= {1}
+
+
+@pytest.mark.slow
+def test_chaos_long_trace_local():
+    """Acceptance: >=100k ops, >=3 distinct event kinds, full parity."""
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    from repro.workloads.chaos import chaos_replay, chaos_setup
+
+    spec, trace, schedule = chaos_setup("chaos_churn", seed=1, ops=110_000)
+    rep = chaos_replay(spec, trace, schedule, oracle="streaming")
+    assert rep["ok"], rep["mismatch_examples"]
+    assert rep["mutations"] + rep["reads"] >= 100_000
+    assert len(rep["event_counts"]) >= 3, rep["event_counts"]
+    assert rep["events_fired"] >= 3
+    assert all(r["digest_ok"] for r in rep["events"]
+               if not r["skipped"])
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_chaos_long_trace_sharded():
+    """The same >=100k-op acceptance bar on the sharded placement."""
+    rep = _run_self("--run-sharded-long", 7200)
+    assert rep["ok"], rep["mismatch_examples"]
+    assert rep["mutations"] + rep["reads"] >= 100_000
+    assert len(rep["event_counts"]) >= 3, rep["event_counts"]
+
+
+def _sharded_main() -> int:
+    from repro.workloads.chaos import (chaos_replay, chaos_setup,
+                                       default_mesh_for)
+
+    spec, trace, schedule = chaos_setup(
+        "chaos_reshard", placement="sharded", seed=5, scale=0.3)
+    mesh = default_mesh_for(spec.n_shards, spec.n_lanes)
+    rep = chaos_replay(
+        spec, trace, schedule, mesh=mesh,
+        mesh_for=lambda n: default_mesh_for(n, spec.n_lanes),
+        oracle="streaming", raise_on_mismatch=False)
+    print(json.dumps(rep))
+    return 0
+
+
+def _sharded_long_main() -> int:
+    from repro.workloads.chaos import (chaos_replay, chaos_setup,
+                                       default_mesh_for)
+
+    spec, trace, schedule = chaos_setup(
+        "chaos_reshard", placement="sharded", seed=2, ops=110_000,
+        kinds=("kill_revive", "reshard", "policy_flap", "handover"),
+        n_events=8)
+    mesh = default_mesh_for(spec.n_shards, spec.n_lanes)
+    rep = chaos_replay(
+        spec, trace, schedule, mesh=mesh,
+        mesh_for=lambda n: default_mesh_for(n, spec.n_lanes),
+        oracle="streaming", raise_on_mismatch=False)
+    print(json.dumps(rep))
+    return 0
+
+
+if __name__ == "__main__":
+    if sys.argv[1:] == ["--run-sharded"]:
+        sys.exit(_sharded_main())
+    assert sys.argv[1:] == ["--run-sharded-long"], sys.argv
+    sys.exit(_sharded_long_main())

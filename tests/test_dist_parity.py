@@ -13,6 +13,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 HERE = os.path.abspath(__file__)
 
 
@@ -99,6 +101,7 @@ def _parity_main():
     return 0
 
 
+@pytest.mark.subprocess
 def test_dist_parity_through_facade():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -4,7 +4,10 @@ import os
 import subprocess
 import sys
 
+import pytest
 
+
+@pytest.mark.subprocess
 def test_dist_table_equivalence_8_devices():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,0 +1,193 @@
+"""Oracle-vs-oracle: the streaming oracle must BE the materializing one.
+
+The chaos harness and million-op traces lean on `StreamingOracle` — an
+O(1)-per-op live-set + group-occupancy + rolling-digest model whose
+correctness rests on a theorem (statuses are a pure function of live
+content: an op OVERFLOWs iff its key's dmax-bit hash-prefix group already
+holds bucket_size live items, *before* any presence check, for inserts
+AND deletes; otherwise presence decides). These tests pin that theorem
+differentially against the paper-literal materializing `SeqExtHash` on
+randomized op streams — including deliberately tiny (dmax, bucket_size)
+geometries where OVERFLOW and split churn dominate — plus the digest
+algebra and the snapshot canonical-form invariance the digest parity
+checks depend on.
+
+Property tests draw through tests/_hyp (hypothesis when installed, the
+deterministic fallback otherwise), so tier-1 runs them everywhere.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+_MASK64 = (1 << 64) - 1
+
+
+def _oracles(dmax, bucket_size):
+    from repro.core.reference import SeqExtHash, StreamingOracle
+
+    return (SeqExtHash(dmax, bucket_size),
+            StreamingOracle(dmax, bucket_size))
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_streaming_equals_materializing(data):
+    """Lock-step status/read/content parity on randomized op streams.
+
+    Small geometries (dmax 2..6, bucket_size 1..4) over a narrow key
+    range force every regime: duplicate upserts, deletes of absent keys,
+    saturated hash-prefix groups (OVERFLOW on both insert and delete
+    paths), negative keys, and full drain-refill cycles.
+    """
+    from repro.core.reference import content_digest
+
+    dmax = data.draw(st.integers(2, 6))
+    b = data.draw(st.integers(1, 4))
+    n_ops = data.draw(st.integers(1, 200))
+    span = data.draw(st.integers(8, 96))
+    mat, stream = _oracles(dmax, b)
+
+    saw_overflow = False
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(("ins", "del", "get")))
+        key = data.draw(st.integers(-span, span))
+        if op == "ins":
+            val = data.draw(st.integers(0, (1 << 20)))
+            got_m = mat.insert(key, val)
+            got_s = stream.insert(key, val)
+        elif op == "del":
+            got_m = mat.delete(key)
+            got_s = stream.delete(key)
+        else:
+            got_m = mat.lookup(key)
+            got_s = stream.lookup(key)
+        assert got_m == got_s, (op, key, got_m, got_s)
+        saw_overflow |= got_m == -3
+
+    assert mat.as_dict() == stream.as_dict()
+    assert stream.size == len(stream.as_dict())
+    # the rolling digest equals a from-scratch digest of the final content
+    items = sorted(stream.as_dict().items())
+    keys = np.array([k for k, _ in items], dtype=np.int64)
+    vals = np.array([v for _, v in items], dtype=np.int64)
+    assert stream.digest == content_digest(keys, vals)
+    del saw_overflow  # coverage varies per example; parity is the claim
+
+
+def test_overflow_regime_reachable():
+    """Sanity that the property test's geometry actually reaches
+    OVERFLOW (a vacuous parity sweep would prove nothing): bucket_size 1
+    at dmax 2 saturates after a handful of inserts."""
+    from repro.core.reference import OVERFLOW
+
+    mat, stream = _oracles(2, 1)
+    statuses = [(mat.insert(k, k), stream.insert(k, k))
+                for k in range(64)]
+    assert all(m == s for m, s in statuses)
+    assert any(m == OVERFLOW for m, _ in statuses)
+    # and OVERFLOW on the *delete* path too: a delete aimed at a
+    # saturated group must refuse even when the key is absent
+    full_prefixes = {p for p, c in stream.groups.items() if c >= 1}
+    deletes = [(mat.delete(k), stream.delete(k))
+               for k in range(64, 160)]
+    assert all(m == s for m, s in deletes)
+    assert any(m == OVERFLOW for m, _ in deletes), full_prefixes
+
+
+def test_digest_algebra():
+    """content_digest is the commutative sum of pair_digest terms, so
+    insertion order cannot matter and removal is exact subtraction."""
+    from repro.core.reference import content_digest, pair_digest
+
+    rng = np.random.default_rng(7)
+    keys = rng.integers(-(1 << 31), 1 << 31, 64).astype(np.int64)
+    vals = rng.integers(0, 1 << 31, 64).astype(np.int64)
+    want = 0
+    for k, v in zip(keys, vals):
+        want = (want + pair_digest(int(k), int(v))) & _MASK64
+    assert content_digest(keys, vals) == want
+    perm = rng.permutation(64)
+    assert content_digest(keys[perm], vals[perm]) == want
+    # removing one pair == subtracting its term
+    drop = (want - pair_digest(int(keys[0]), int(vals[0]))) & _MASK64
+    assert content_digest(keys[1:], vals[1:]) == drop
+    empty = np.array([], dtype=np.int64)
+    assert content_digest(empty, empty) == 0
+
+
+@given(st.data())
+@settings(max_examples=6, deadline=None)
+def test_snapshot_canonical_image_order_invariant(data):
+    """Snapshot images are canonical: two tables holding the same items
+    produce bit-identical image arrays no matter the insert order that
+    built them (satellite: canonical-form invariance under permutation).
+
+    This is exactly the property the chaos harness's digest parity rides
+    on — extract_image must be a pure function of logical content.
+    """
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    from repro.core import snapshot
+    from repro.core.spec import TableSpec
+    from repro.table_api import Table
+
+    keys = data.draw(st.lists(st.integers(0, 4000),
+                              min_size=1, max_size=40, unique=True))
+    spec = TableSpec(dmax=8, bucket_size=8, pool_size=128, n_lanes=16,
+                     placement="local")
+
+    def build(order):
+        table = Table.create(spec)
+        arr = np.asarray(order, dtype=np.int32)
+        kinds = np.ones_like(arr)  # INS
+        table, _ = table.apply(kinds, arr, arr * 3 + 1)
+        return snapshot.extract_image(table)
+
+    fwd = build(keys)
+    rev = build(list(reversed(keys)))
+    assert fwd.n_items == rev.n_items == len(keys)
+    np.testing.assert_array_equal(fwd.keys, rev.keys)
+    np.testing.assert_array_equal(fwd.values, rev.values)
+    from repro.core.reference import content_digest
+    assert (content_digest(fwd.keys, fwd.values)
+            == content_digest(rev.keys, rev.values))
+
+
+@pytest.mark.parametrize("oracle", ["streaming", "both"])
+def test_replay_oracle_modes(oracle):
+    """The replayer's oracle selection: 'streaming' alone and 'both'
+    (materializing cross-check per op) must pass a churny registry
+    scenario and report which oracle ran."""
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+    from repro.workloads import get_scenario, replay
+
+    spec, trace = get_scenario("mixed_churn", scale=0.4)
+    rep = replay(spec, trace, oracle=oracle, raise_on_mismatch=False)
+    assert rep["ok"], (rep["status_mismatches"], rep["content_mismatches"],
+                       rep["mismatch_examples"], rep["error_flag"])
+    assert rep["oracle"] == oracle
+    assert rep["policy"]["splits"] > 0
+
+
+def test_streaming_oracle_million_op_burst():
+    """A quick burst proving the streaming oracle's cost model: 200k ops
+    complete in well under a second of oracle time (the full 1M-op
+    throughput claim lives in benchmarks/chaos.py -> BENCH_chaos.json)."""
+    from repro.core.reference import StreamingOracle
+
+    stream = StreamingOracle(18, 8)
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 1 << 20, 200_000)
+    for i, k in enumerate(keys.tolist()):
+        if i % 3 == 2:
+            stream.delete(k)
+        else:
+            stream.insert(k, i)
+    assert stream.size > 0
+    items = sorted(stream.as_dict().items())
+    from repro.core.reference import content_digest
+    ks = np.array([k for k, _ in items], dtype=np.int64)
+    vs = np.array([v for _, v in items], dtype=np.int64)
+    assert stream.digest == content_digest(ks, vs)

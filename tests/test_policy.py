@@ -277,6 +277,7 @@ def test_policy_random_ops_keep_invariants_and_parity(data):
 HERE = os.path.abspath(__file__)
 
 
+@pytest.mark.subprocess
 def test_policy_stats_and_depth_sharded():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

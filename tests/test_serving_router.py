@@ -223,6 +223,7 @@ def test_rolling_upgrade_zero_dropped():
 
 # --- sharded: subprocess with 8 forced host devices -------------------------
 
+@pytest.mark.subprocess
 def test_closed_loop_sharded():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

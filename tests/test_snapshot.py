@@ -284,6 +284,7 @@ def test_versioned_header(tmp_path):
 # --- cross-placement re-shard: subprocess with 8 host devices --------------
 
 
+@pytest.mark.subprocess
 def test_reshard_across_meshes():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -93,6 +93,7 @@ def test_facade_local(backend):
 
 # --- sharded combos need 8 host devices → subprocess ----------------------
 
+@pytest.mark.subprocess
 @pytest.mark.parametrize("backend", ["xla", "interpret"])
 def test_facade_sharded(backend):
     env = dict(os.environ)

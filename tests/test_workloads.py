@@ -12,6 +12,14 @@ the paper's §4.5 shrink path).
 Local placement runs in-process; the sharded placement sweep runs in a
 subprocess with 8 forced host devices (device count is process-global),
 at reduced scale — same checks, (data=4, model=2) mesh, 2 table shards.
+
+Both sweeps run with ``oracle="both"``: every op is checked against the
+materializing `SeqExtHash` AND the streaming `StreamingOracle` in
+lock-step, so each scenario replay is simultaneously parity evidence for
+the table and an oracle-vs-oracle cross-check (any divergence between
+the oracles raises immediately rather than being booked as a table
+mismatch). The chaos_* scenarios replay here plain — the event-injecting
+runs live in tests/test_chaos.py.
 """
 import json
 import os
@@ -23,10 +31,18 @@ import pytest
 HERE = os.path.abspath(__file__)
 
 # the scenario classes whose replay must show BOTH elastic directions
-CHURNY = ("phased_drain", "mixed_churn", "snapshot_restore")
+CHURNY = ("phased_drain", "mixed_churn", "snapshot_restore",
+          "chaos_churn", "chaos_reshard")
 
-ALL_SCENARIOS = ("uniform", "zipf", "phased_drain", "mixed_churn",
-                 "snapshot_restore")
+# the 5 base scenario classes: the sharded subprocess sweep is pinned to
+# these to bound its runtime (chaos_* get dedicated sharded coverage in
+# tests/test_chaos.py, including the event-injecting runs)
+BASE_SCENARIOS = ("uniform", "zipf", "phased_drain", "mixed_churn",
+                  "snapshot_restore")
+
+# the full registry, swept locally (chaos_* replay plain here: without an
+# event schedule they are ordinary churny parity scenarios)
+ALL_SCENARIOS = BASE_SCENARIOS + ("chaos_churn", "chaos_reshard")
 
 
 def _assert_scenario_report(name: str, rep: dict) -> None:
@@ -60,7 +76,8 @@ def test_scenario_replay_parity_local(name):
     from repro.workloads import get_scenario, replay
 
     spec, trace = get_scenario(name)
-    rep = replay(spec, trace, raise_on_mismatch=False)
+    rep = replay(spec, trace, oracle="both", raise_on_mismatch=False)
+    assert rep["oracle"] == "both"
     _assert_scenario_report(name, rep)
 
 
@@ -104,6 +121,7 @@ def test_generator_determinism():
 # --- sharded sweep: subprocess with 8 host devices -------------------------
 
 
+@pytest.mark.subprocess
 def test_scenario_replay_parity_sharded():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -114,7 +132,7 @@ def test_scenario_replay_parity_sharded():
         env=env, capture_output=True, text=True, timeout=2400)
     assert proc.returncode == 0, (proc.stdout[-3000:], proc.stderr[-3000:])
     reports = json.loads(proc.stdout.splitlines()[-1])
-    assert set(reports) == set(ALL_SCENARIOS)
+    assert set(reports) == set(BASE_SCENARIOS)
     for name, rep in reports.items():
         assert rep["placement"] == "sharded"
         _assert_scenario_report(name, rep)
@@ -122,15 +140,15 @@ def test_scenario_replay_parity_sharded():
 
 def _sharded_main() -> int:
     import jax
-    from repro.workloads import SCENARIOS, get_scenario, replay
+    from repro.workloads import get_scenario, replay
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     reports = {}
-    for name in SCENARIOS:
+    for name in BASE_SCENARIOS:
         # reduced scale: shard_map on a forced-8-device CPU host is slow,
         # and parity per op is checked regardless of trace length
         spec, trace = get_scenario(name, placement="sharded", scale=0.5)
-        reports[name] = replay(spec, trace, mesh=mesh,
+        reports[name] = replay(spec, trace, mesh=mesh, oracle="both",
                                raise_on_mismatch=False)
     print(json.dumps(reports))
     return 0
